@@ -1,0 +1,75 @@
+"""Paper §3.1–3.2 batch claim: "any batch operation in the network can be
+computed with an equivalent complexity to processing a single document".
+
+We process a batch of b revisions of one document through the engine
+(shared base + per-revision deltas, the compressed 'base + sparse index
+deltas' representation of fig. 2 in execution form) and report
+ops(batch) / ops(single) versus b. Dense cost grows as b; the compressed
+path should stay near-flat (1 + b·edit_fraction·const).
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import dense_ops_for, ensure_results, make_vqt_engine, write_csv
+from repro.core.edits import random_revision
+from repro.core.positional import PositionAllocator
+from repro.data import SyntheticCorpus
+
+
+def run(doc_len=384, max_batch=16, edit_fraction=0.02, seed=0):
+    eng, cfg, counter = make_vqt_engine(seed)
+    corpus = SyntheticCorpus(vocab=cfg.vocab, seed=seed)
+    base_doc = corpus.document(doc_len, 0)
+    rng = np.random.default_rng(seed)
+    revisions = [
+        np.asarray(random_revision(rng, base_doc, cfg.vocab, edit_fraction))
+        for _ in range(max_batch)
+    ]
+
+    # cost of one document from scratch (the unit)
+    alloc = PositionAllocator(doc_len, cfg.pos_pool)
+    counter.counts.clear()
+    base_state = eng.full_forward(base_doc, alloc.positions)
+    single = counter.total
+
+    rows = []
+    for b in (1, 2, 4, 8, 16):
+        if b > max_batch:
+            break
+        counter.counts.clear()
+        st = eng.full_forward(base_doc, alloc.positions)  # shared base
+        a2 = PositionAllocator(doc_len, cfg.pos_pool)
+        for r in range(b):
+            a2.positions = list(alloc.positions)
+            eng.apply_revision(st, revisions[r], a2)
+        batch_ops = counter.total
+        dense_batch = b * dense_ops_for(cfg, doc_len)
+        rows.append((
+            b,
+            round(batch_ops / single, 3),  # compressed: vs 1 document
+            round(dense_batch / single, 3),  # dense: grows as b
+        ))
+    write_csv(f"{ensure_results()}/batch_scaling.csv",
+              ["batch", "compressed_rel_ops", "dense_rel_ops"], rows)
+    for b, c, d in rows:
+        print(f"  b={b:3d}: compressed {c:7.2f}x single-doc  (dense {d:7.2f}x)")
+    growth = (rows[-1][1] - rows[0][1]) / (rows[-1][0] - rows[0][0])
+    print(f"per-extra-revision marginal cost: {growth:.3f} of a full document "
+          f"(paper claim: ~edit-fraction-proportional, here frac={edit_fraction})")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--doc-len", type=int, default=384)
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--fraction", type=float, default=0.02)
+    args = ap.parse_args()
+    run(args.doc_len, args.max_batch, args.fraction)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Shared helpers for the paper-table benchmarks (CPU-scale protocol).
+
+The paper measures *theoretical arithmetic operations*; we reproduce the
+protocol at laptop scale: smoke-size models (2 layers, d=256), 512-token
+documents (paper: 1536-2048), tens of edit samples (paper: 500). All knobs
+are CLI-adjustable to run the full-size protocol on bigger hardware.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def ensure_results() -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    return RESULTS_DIR
+
+
+def dense_ops_for(cfg, n: int) -> int:
+    from repro.core.opcount import dense_transformer_forward_ops
+
+    kinds = {l.ffn for l in cfg.layer_list()}
+    return dense_transformer_forward_ops(
+        n_layers=cfg.n_layers, d_model=cfg.d_model, n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads, d_ff=cfg.d_ff, vocab=cfg.vocab, seq_len=n,
+        ffn_gated=kinds <= {"swiglu", "geglu"}, include_lm_head=False,
+    )
+
+
+def make_vqt_engine(seed: int = 0, trained_params=None, vq_heads: int = 2):
+    import dataclasses
+
+    from repro.configs.vq_opt_125m import smoke_config
+    from repro.core.incremental import IncrementalEngine
+    from repro.core.opcount import OpCounter
+    from repro.models import transformer as T
+
+    cfg = smoke_config(vqt=True)
+    if vq_heads != 2:
+        cfg = dataclasses.replace(
+            cfg, vqt=dataclasses.replace(cfg.vqt, n_heads=vq_heads))
+    params = trained_params
+    if params is None:
+        params = T.init_params(jax.random.PRNGKey(seed), cfg)
+    counter = OpCounter()
+    return IncrementalEngine(jax.device_get(params), cfg, counter), cfg, counter
+
+
+def write_csv(path: str, header: list[str], rows: list[tuple]) -> None:
+    with open(path, "w") as f:
+        f.write(",".join(header) + "\n")
+        for r in rows:
+            f.write(",".join(str(x) for x in r) + "\n")
+    print(f"wrote {path} ({len(rows)} rows)")

@@ -1,0 +1,54 @@
+"""Paper Fig. 3: offline speedup vs edit fraction — validates the paper's
+claim that the op reduction is inversely proportional to the fraction of
+modified tokens."""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import dense_ops_for, ensure_results, make_vqt_engine, write_csv
+from repro.core.edits import edit_script
+from repro.core.positional import PositionAllocator
+from repro.data import SyntheticCorpus
+from repro.data.edit_stream import EditStream
+
+
+def run(doc_len=512, n_pairs=24, seed=0):
+    eng, cfg, counter = make_vqt_engine(seed)
+    stream = EditStream(SyntheticCorpus(vocab=cfg.vocab, seed=seed), doc_len=doc_len,
+                        seed=seed)
+    fractions = np.geomspace(0.002, 0.2, 8)
+    rows = []
+    for i in range(n_pairs):
+        frac = float(fractions[i % len(fractions)])
+        old, new = stream.revision(i, frac)
+        script = edit_script(list(old), list(new))
+        actual_frac = len(script) / len(old)
+        alloc = PositionAllocator(len(old), cfg.pos_pool)
+        state = eng.full_forward(list(old), alloc.positions)
+        before = counter.total
+        state = eng.apply_revision(state, new, alloc)  # batched App. A.1 sweep
+        ops = counter.total - before
+        speedup = dense_ops_for(cfg, state.n) / max(ops, 1)
+        rows.append((round(actual_frac, 5), round(speedup, 3)))
+    write_csv(f"{ensure_results()}/fig3_offline.csv",
+              ["edit_fraction", "speedup"], rows)
+    # paper claim: speedup ~ 1/fraction -> log-log slope ~ -1
+    f = np.array([r[0] for r in rows])
+    s = np.array([r[1] for r in rows])
+    slope = np.polyfit(np.log(f), np.log(s), 1)[0]
+    print(f"log-log slope speedup-vs-fraction: {slope:.2f} (paper: ~-1)")
+    return rows, slope
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--doc-len", type=int, default=512)
+    ap.add_argument("--pairs", type=int, default=24)
+    args = ap.parse_args()
+    run(args.doc_len, args.pairs)
+
+
+if __name__ == "__main__":
+    main()

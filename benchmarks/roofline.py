@@ -1,0 +1,92 @@
+"""§Roofline report: format results/dryrun.jsonl into the EXPERIMENTS.md
+tables (all three terms, dominant bottleneck, MODEL_FLOPS ratio)."""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+DEFAULT_IN = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun.jsonl")
+
+
+def load(path=DEFAULT_IN):
+    recs = [json.loads(l) for l in open(path)]
+    # keep the latest record per (arch, shape, mesh)
+    latest = {}
+    for r in recs:
+        latest[(r["arch"], r["shape"], r["mesh"])] = r
+    return list(latest.values())
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def roofline_table(recs, markdown=False) -> str:
+    rows = []
+    for r in recs:
+        if r.get("mesh") != "16x16" or "roofline" not in r:
+            continue
+        t = r["roofline"]["terms"]
+        rows.append((
+            r["arch"], r["shape"], fmt_s(t["compute_s"]), fmt_s(t["memory_s"]),
+            fmt_s(t["collective_s"]), t["bottleneck"].replace("_s", ""),
+            f"{t['useful_ratio']:.2f}",
+        ))
+    rows.sort()
+    hdr = ("arch", "shape", "compute", "memory", "collective", "bottleneck",
+           "useful-FLOP ratio")
+    if markdown:
+        out = ["| " + " | ".join(hdr) + " |",
+               "|" + "---|" * len(hdr)]
+        out += ["| " + " | ".join(r) + " |" for r in rows]
+    else:
+        out = ["  ".join(f"{h:>14s}" for h in hdr)]
+        out += ["  ".join(f"{c:>14s}" for c in r) for r in rows]
+    return "\n".join(out)
+
+
+def dryrun_table(recs, markdown=False) -> str:
+    rows = []
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r["status"] == "skipped":
+            rows.append((r["arch"], r["shape"], r["mesh"], "SKIP",
+                         r.get("reason", "")[:46]))
+            continue
+        f = r.get("full", {})
+        mem = f.get("memory", {})
+        arg_gb = (mem.get("argument_bytes") or 0) / 1e9
+        tmp_gb = (mem.get("temp_bytes") or 0) / 1e9
+        rows.append((
+            r["arch"], r["shape"], r["mesh"], r["status"],
+            f"args {arg_gb:.2f}GB + temp {tmp_gb:.2f}GB/dev, "
+            f"coll {f.get('collective_bytes', 0)/1e6:.1f}MB, "
+            f"compile {f.get('compile_s', 0):.0f}s",
+        ))
+    hdr = ("arch", "shape", "mesh", "status", "per-device memory & collectives")
+    if markdown:
+        out = ["| " + " | ".join(hdr) + " |", "|" + "---|" * len(hdr)]
+        out += ["| " + " | ".join(map(str, r)) + " |" for r in rows]
+    else:
+        out = ["\t".join(hdr)] + ["\t".join(map(str, r)) for r in rows]
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp", default=DEFAULT_IN)
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    recs = load(args.inp)
+    print("== Dry-run matrix ==")
+    print(dryrun_table(recs, args.markdown))
+    print("\n== Roofline (single pod, 256 chips) ==")
+    print(roofline_table(recs, args.markdown))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Benchmark aggregator — one function per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # quick protocol
+  PYTHONPATH=src python -m benchmarks.run --full     # longer training runs
+
+Emits name,value CSV lines (plus per-benchmark CSVs under results/).
+The dry-run/roofline tables read results/dryrun.jsonl (produced by
+``python -m repro.launch.dryrun --all --roofline``).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale-ish protocol")
+    ap.add_argument("--skip-accuracy", action="store_true",
+                    help="skip the (slow) table-1 training pipeline")
+    args = ap.parse_args()
+
+    from benchmarks import fig3_offline, fig4_online, table2_speedups
+
+    t0 = time.time()
+    print("=== Table 2: edit-processing speedups (op-counted) ===")
+    rows = table2_speedups.run(
+        doc_len=1024 if args.full else 384,
+        n_edits=120 if args.full else 24,
+        n_pairs=24 if args.full else 8,
+    )
+    for r in rows:
+        print(f"table2,{r[0]},atomic={r[1]},revision={r[2]},first5={r[3]}")
+
+    print(f"\n=== Fig 3: offline speedup vs edit fraction ({time.time()-t0:.0f}s) ===")
+    _, slope = fig3_offline.run(
+        doc_len=1024 if args.full else 384, n_pairs=24 if args.full else 12)
+    print(f"fig3,loglog_slope,{slope:.3f}")
+
+    print(f"\n=== Fig 4: online speedup vs location ({time.time()-t0:.0f}s) ===")
+    fig4_online.run(doc_len=1024 if args.full else 384,
+                    n_edits=80 if args.full else 30)
+
+    print(f"\n=== Batch scaling (paper §3.1 claim) ({time.time()-t0:.0f}s) ===")
+    from benchmarks import batch_scaling
+
+    rows = batch_scaling.run(doc_len=1024 if args.full else 384,
+                             max_batch=16 if args.full else 8)
+    print(f"batch_scaling,b={rows[-1][0]},compressed={rows[-1][1]},dense={rows[-1][2]}")
+
+    print(f"\n=== Wall-clock: static-bucket jit engine ({time.time()-t0:.0f}s) ===")
+    from benchmarks import wallclock_jit
+
+    rows = wallclock_jit.run(lengths=(256, 1024) if not args.full else (256, 1024, 2048))
+    print(f"wallclock_jit,n={rows[-1][0]},speedup={rows[-1][3]}")
+
+    if not args.skip_accuracy:
+        print(f"\n=== Table 1: accuracy parity ({time.time()-t0:.0f}s) ===")
+        from benchmarks import table1_accuracy
+
+        rows = table1_accuracy.run(
+            lm_steps=400 if args.full else 120,
+            distill_steps=400 if args.full else 120,
+            ft_steps=250 if args.full else 100,
+        )
+        for r in rows:
+            print(f"table1,{r[0]},acc={r[1]},f1={r[2]}")
+
+    dr = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun.jsonl")
+    if os.path.exists(dr):
+        print(f"\n=== Dry-run + roofline ({time.time()-t0:.0f}s) ===")
+        from benchmarks import roofline
+
+        recs = roofline.load(dr)
+        n_ok = sum(1 for r in recs if r["status"] == "ok")
+        n_skip = sum(1 for r in recs if r["status"] == "skipped")
+        n_err = len(recs) - n_ok - n_skip
+        print(f"dryrun,ok={n_ok},skipped={n_skip},errors={n_err}")
+        print(roofline.roofline_table(recs))
+    else:
+        print("\n(run `python -m repro.launch.dryrun --all --roofline --out "
+              "results/dryrun.jsonl` for the dry-run/roofline tables)")
+    print(f"\ntotal {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Paper Table 2: theoretical speedups for processing edit sequences.
+
+Rows: OPT (1X baseline), DistilOPT (2X, structural: half the layers),
+VQ-OPT (h=2) — measured with the incremental engine's op counter.
+Columns: Atomic (online single edits), Entire Revision (offline), First 5%
+(atomic edits restricted to the first 5% of the document).
+
+Speedup = dense-from-scratch ops of the SAME backbone / incremental ops —
+the paper's "ratio of arithmetic operations for the original OPT to VQ-OPT".
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import dense_ops_for, ensure_results, make_vqt_engine, write_csv
+from repro.core.edits import apply_edit, random_atomic_edit
+from repro.core.positional import PositionAllocator
+from repro.data import SyntheticCorpus
+from repro.data.edit_stream import EditStream, revision_pairs
+
+
+def _atomic_speedups(eng, cfg, counter, *, doc_len, n_edits, seed, first_frac=None):
+    corpus = SyntheticCorpus(vocab=cfg.vocab, seed=seed)
+    rng = np.random.default_rng(seed)
+    dense = dense_ops_for(cfg, doc_len)
+    speedups = []
+    tokens = list(corpus.document(doc_len, 0))
+    alloc = PositionAllocator(len(tokens), cfg.pos_pool)
+    state = eng.full_forward(tokens, alloc.positions)
+    for _ in range(n_edits):
+        e = random_atomic_edit(rng, tokens, cfg.vocab)
+        if first_frac is not None:
+            lim = max(1, int(first_frac * len(tokens)))
+            e = type(e)(e.op, int(rng.integers(0, lim)), e.token)
+        before = counter.total
+        state = eng.apply_edit(state, e, alloc)
+        ops = counter.total - before
+        tokens = apply_edit(tokens, e)
+        speedups.append(dense / max(ops, 1))
+    return speedups
+
+
+def _revision_speedups(eng, cfg, counter, *, doc_len, n_pairs, seed):
+    stream = EditStream(SyntheticCorpus(vocab=cfg.vocab, seed=seed), doc_len=doc_len,
+                        seed=seed)
+    out = []
+    for old, new, script, frac in revision_pairs(stream, n_pairs):
+        alloc = PositionAllocator(len(old), cfg.pos_pool)
+        state = eng.full_forward(list(old), alloc.positions)
+        before = counter.total
+        state = eng.apply_revision(state, new, alloc)  # batched App. A.1 sweep
+        ops = counter.total - before
+        dense = dense_ops_for(cfg, state.n)
+        out.append((dense / max(ops, 1), frac))
+    return out
+
+
+def run(doc_len=512, n_edits=40, n_pairs=12, seed=0, trained_params=None):
+    rows = [
+        ("OPT-125M(scaled)", 1.0, 1.0, 1.0),
+        ("DistilOPT", 2.0, 2.0, 2.0),  # structural: half the layers
+    ]
+    # h=2 and h=4 (paper Table 2: larger effective codebook => more code
+    # changes propagate => smaller reuse: 12.1X vs 5.2X at full scale)
+    for vq_heads in (2, 4):
+        if trained_params is not None and vq_heads != 2:
+            continue  # trained weights are h=2
+        eng, cfg, counter = make_vqt_engine(seed, trained_params, vq_heads=vq_heads)
+        atomic = _atomic_speedups(eng, cfg, counter, doc_len=doc_len,
+                                  n_edits=n_edits, seed=seed)
+        first5 = _atomic_speedups(eng, cfg, counter, doc_len=doc_len,
+                                  n_edits=n_edits, seed=seed + 1, first_frac=0.05)
+        rev = _revision_speedups(eng, cfg, counter, doc_len=doc_len,
+                                 n_pairs=n_pairs, seed=seed)
+        rows.append((
+            f"VQ-OPT(h={vq_heads})",
+            round(float(np.median(atomic)), 2),
+            round(float(np.median([s for s, _ in rev])), 2),
+            round(float(np.median(first5)), 2),
+        ))
+    write_csv(
+        f"{ensure_results()}/table2_speedups.csv",
+        ["model", "atomic", "entire_revision", "first_5pct"],
+        rows,
+    )
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--doc-len", type=int, default=512)
+    ap.add_argument("--edits", type=int, default=40)
+    ap.add_argument("--pairs", type=int, default=12)
+    args = ap.parse_args()
+    rows = run(args.doc_len, args.edits, args.pairs)
+    print(f"{'model':20s} {'atomic':>8s} {'revision':>9s} {'first5%':>8s}")
+    for r in rows:
+        print(f"{r[0]:20s} {r[1]:8.1f} {r[2]:9.1f} {r[3]:8.1f}")
+    print("(paper, full scale: VQ-OPT h=2 -> 12.1X atomic, 4.7X revision, 4.8X first-5%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Wall-clock (not op-count) benchmark of the static-bucket jit engine.
+
+The paper reports *theoretical* op reductions; this measures real time for
+the TPU-servable jit path (`repro.serving.jit_engine`) on the current
+backend: full_forward vs one bucketed replace-edit step.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import ensure_results, write_csv
+from repro.configs.vq_opt_125m import smoke_config
+from repro.models import transformer as T
+from repro.serving.jit_engine import JitIncrementalEngine
+
+
+def run(lengths=(256, 512, 1024), edit_capacity=4, row_capacity=64, seed=1):
+    cfg = smoke_config(vqt=True)
+    params = T.init_params(jax.random.PRNGKey(seed), cfg)
+    rows = []
+    for n in lengths:
+        eng = JitIncrementalEngine(params, cfg, edit_capacity=edit_capacity,
+                                   row_capacity=row_capacity)
+        tokens = jnp.asarray(np.random.default_rng(0).integers(0, cfg.vocab, n))
+        positions = jnp.arange(n) * 3
+        st = eng.full_forward(tokens, positions)
+        jax.block_until_ready(st)
+        t0 = time.perf_counter()
+        for _ in range(5):
+            jax.block_until_ready(eng.full_forward(tokens, positions))
+        t_full = (time.perf_counter() - t0) / 5
+        ep = jnp.asarray([10] + [-1] * (edit_capacity - 1), jnp.int32)
+        et = jnp.asarray([5] + [0] * (edit_capacity - 1), jnp.int32)
+        st2, _ = eng.apply_replaces(st, ep, et)
+        jax.block_until_ready(st2)
+        t0 = time.perf_counter()
+        for _ in range(20):
+            st2, _ = eng.apply_replaces(st, ep, et)
+            jax.block_until_ready(st2)
+        t_inc = (time.perf_counter() - t0) / 20
+        rows.append((n, round(t_full * 1e3, 2), round(t_inc * 1e3, 2),
+                     round(t_full / t_inc, 2)))
+        print(f"  n={n:5d}: full {t_full*1e3:7.1f}ms  incr {t_inc*1e3:7.1f}ms "
+              f"-> {t_full/t_inc:5.1f}X wall-clock")
+    write_csv(f"{ensure_results()}/wallclock_jit.csv",
+              ["n", "full_ms", "incremental_ms", "speedup"], rows)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--lengths", type=int, nargs="+", default=[256, 512, 1024])
+    args = ap.parse_args()
+    run(tuple(args.lengths))
+
+
+if __name__ == "__main__":
+    main()

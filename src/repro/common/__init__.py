@@ -1,0 +1,1 @@
+from repro.common.pytree import static_field

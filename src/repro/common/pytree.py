@@ -1,0 +1,42 @@
+"""Small helpers for dataclass pytrees (no flax available — pure JAX)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+
+def static_field(**kwargs: Any) -> Any:
+    """A dataclass field treated as static (metadata) by jax pytrees."""
+    meta = kwargs.pop("metadata", {})
+    meta = {**meta, "static": True}
+    return dataclasses.field(metadata=meta, **kwargs)
+
+
+def path_entry_name(p: Any) -> str:
+    """Readable name for one tree-path entry (DictKey / SequenceKey /
+    GetAttrKey / FlattenedIndexKey)."""
+    for attr in ("key", "name", "idx"):
+        if hasattr(p, attr):
+            return str(getattr(p, attr))
+    return str(p)
+
+
+def path_names(path) -> tuple[str, ...]:
+    return tuple(path_entry_name(p) for p in path)
+
+
+def pytree_dataclass(cls):
+    """Register a dataclass as a jax pytree, honoring static_field metadata."""
+    cls = dataclasses.dataclass(cls)
+    data_fields = []
+    meta_fields = []
+    for f in dataclasses.fields(cls):
+        if f.metadata.get("static", False):
+            meta_fields.append(f.name)
+        else:
+            data_fields.append(f.name)
+    return jax.tree_util.register_dataclass(
+        cls, data_fields=data_fields, meta_fields=meta_fields
+    )

@@ -1,0 +1,46 @@
+"""Architecture registry. Each assigned architecture has a module here with
+``config()`` (full-size, exact paper/model-card dims) and ``smoke_config()``
+(reduced: <=2 layers, d_model<=512, <=4 experts) for CPU tests."""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "deepseek_v2_236b",
+    "gemma3_12b",
+    "deepseek_v3_671b",
+    "internvl2_1b",
+    "musicgen_large",
+    "h2o_danube_1_8b",
+    "phi4_mini_3_8b",
+    "stablelm_1_6b",
+    "hymba_1_5b",
+    "rwkv6_7b",
+    "vq_opt_125m",  # the paper's own model
+]
+
+_ALIASES = {
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "gemma3-12b": "gemma3_12b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "internvl2-1b": "internvl2_1b",
+    "musicgen-large": "musicgen_large",
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "phi4-mini-3.8b": "phi4_mini_3_8b",
+    "stablelm-1.6b": "stablelm_1_6b",
+    "hymba-1.5b": "hymba_1_5b",
+    "rwkv6-7b": "rwkv6_7b",
+    "vq-opt-125m": "vq_opt_125m",
+}
+
+
+def get_config(name: str, smoke: bool = False, **kwargs):
+    """kwargs are forwarded to the arch module's config()/smoke_config()
+    (e.g. ``vqt=True`` to enable the paper's feature on any architecture)."""
+    mod_name = _ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.smoke_config(**kwargs) if smoke else mod.config(**kwargs)
+
+
+def all_arch_names() -> list[str]:
+    return list(_ALIASES.keys())

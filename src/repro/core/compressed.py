@@ -1,0 +1,168 @@
+"""Compressed representation of vector-quantized activations (paper §3.1-3.2).
+
+A (batched) activation tensor ``X ∈ R^{b×n×d}`` whose rows are drawn from a
+small set of unique vectors is stored as a codebook ``C ∈ R^{q×d}`` plus an
+index map ``P ∈ {0..q-1}^{b×n}`` with ``X[b,n,:] = C[P[b,n],:]``.
+
+Two facts make this useful (paper §3.2):
+
+* *per-location* ops ``Y = F(X)`` with ``Y[i,j,:] = f(X[i,j,:])`` reduce to
+  ``(P, f(C))`` — cost ``O(q·cost(f))`` instead of ``O(b·n·cost(f))``;
+* *binary element-wise* ops between two compressed tensors reduce to applying
+  ``f`` on the **unique pairs** of codebook rows (App. A.3).
+
+The classes here are pytrees and work both eagerly (exact sizes; used by the
+incremental serving engine and the op-counting benchmarks) and under jit with
+a static ``capacity`` (used by the compressed batch forward).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.pytree import pytree_dataclass
+
+
+@pytree_dataclass
+class Compressed:
+    """codebook: [cap, d]; idx: int32 [...] with values in [0, n_codes)."""
+
+    codebook: jax.Array
+    idx: jax.Array
+    n_codes: jax.Array  # scalar int32 <= cap
+
+    @property
+    def capacity(self) -> int:
+        return self.codebook.shape[0]
+
+    @property
+    def d(self) -> int:
+        return self.codebook.shape[-1]
+
+    def to_dense(self) -> jax.Array:
+        return jnp.take(self.codebook, self.idx, axis=0)
+
+    def occupancy(self) -> jax.Array:
+        """Number of *distinct* codes actually referenced by idx."""
+        used = jnp.zeros((self.capacity,), jnp.bool_).at[self.idx.reshape(-1)].set(True)
+        return jnp.sum(used)
+
+
+def from_dense_rows(rows: jax.Array, idx: jax.Array, n_codes=None) -> Compressed:
+    """Wrap explicit (codebook, idx) without dedup."""
+    if n_codes is None:
+        n_codes = rows.shape[0]
+    return Compressed(rows, idx.astype(jnp.int32), jnp.asarray(n_codes, jnp.int32))
+
+
+def from_tokens(embedding: jax.Array, tokens: jax.Array) -> Compressed:
+    """Token embeddings are 'born quantized' (paper footnote 1): the embedding
+    matrix is the codebook and the token ids are the index map."""
+    return Compressed(
+        embedding, tokens.astype(jnp.int32), jnp.asarray(embedding.shape[0], jnp.int32)
+    )
+
+
+def compress(x: jax.Array, capacity: Optional[int] = None) -> Compressed:
+    """Dedup the rows of a dense tensor [..., d] into a Compressed.
+
+    Eager-only when ``capacity`` is None (exact size). With ``capacity`` set it
+    is jit-compatible; rows beyond capacity raise in eager mode.
+    """
+    *lead, d = x.shape
+    flat = x.reshape(-1, d)
+    if capacity is None:
+        np_flat = np.asarray(flat)
+        uniq, inverse = np.unique(np_flat, axis=0, return_inverse=True)
+        return Compressed(
+            jnp.asarray(uniq),
+            jnp.asarray(inverse.reshape(lead), jnp.int32),
+            jnp.asarray(uniq.shape[0], jnp.int32),
+        )
+    # jit path: hash rows is unsafe; use lexicographic unique via void view is
+    # not available in jnp. We instead require the caller to provide indices
+    # (activations in this codebase are always constructed quantized).
+    raise NotImplementedError(
+        "jit-compatible dense compression is not needed: activations are "
+        "constructed in compressed form by the VQ layers."
+    )
+
+
+def per_location(f: Callable[[jax.Array], jax.Array], c: Compressed) -> Compressed:
+    """Apply a per-location vector op on the codebook only (paper eq. 2)."""
+    return Compressed(f(c.codebook), c.idx, c.n_codes)
+
+
+def binary(
+    f: Callable[[jax.Array, jax.Array], jax.Array],
+    a: Compressed,
+    b: Compressed,
+    capacity: Optional[int] = None,
+) -> Compressed:
+    """Binary element-wise op between two compressed tensors (App. A.3).
+
+    If the index maps are identical this is a pure per-location op; otherwise
+    we dedup the *pairs* of indices and apply ``f`` once per unique pair.
+    """
+    assert a.idx.shape == b.idx.shape, (a.idx.shape, b.idx.shape)
+    key = a.idx.astype(jnp.int64) * int(b.capacity) + b.idx.astype(jnp.int64)
+    flat = key.reshape(-1)
+    if capacity is None:
+        uniq, inverse = jnp.unique(flat, return_inverse=True)
+        n_codes = uniq.shape[0]
+    else:
+        uniq, inverse = jnp.unique(
+            flat, return_inverse=True, size=capacity, fill_value=jnp.int64(-1)
+        )
+        n_codes = jnp.sum(uniq >= 0)
+    ia = (jnp.maximum(uniq, 0) // int(b.capacity)).astype(jnp.int32)
+    ib = (jnp.maximum(uniq, 0) % int(b.capacity)).astype(jnp.int32)
+    rows = f(jnp.take(a.codebook, ia, axis=0), jnp.take(b.codebook, ib, axis=0))
+    return Compressed(
+        rows,
+        inverse.reshape(a.idx.shape).astype(jnp.int32),
+        jnp.asarray(n_codes, jnp.int32),
+    )
+
+
+def add(a: Compressed, b: Compressed, capacity: Optional[int] = None) -> Compressed:
+    """Residual connection over compressed tensors."""
+    return binary(jnp.add, a, b, capacity=capacity)
+
+
+def recompress(c: Compressed, capacity: Optional[int] = None) -> Compressed:
+    """Drop unreferenced codebook rows (keeps codebooks from growing across
+    layers; paper's additive-growth argument keeps this O(n+b))."""
+    flat = c.idx.reshape(-1)
+    if capacity is None:
+        uniq, inverse = jnp.unique(flat, return_inverse=True)
+        n_codes = uniq.shape[0]
+    else:
+        uniq, inverse = jnp.unique(
+            flat, return_inverse=True, size=capacity, fill_value=jnp.int32(-1)
+        )
+        n_codes = jnp.sum(uniq >= 0)
+    rows = jnp.take(c.codebook, jnp.maximum(uniq, 0).astype(jnp.int32), axis=0)
+    return Compressed(
+        rows, inverse.reshape(c.idx.shape).astype(jnp.int32), jnp.asarray(n_codes, jnp.int32)
+    )
+
+
+def base_and_deltas(c: Compressed) -> tuple[jax.Array, jax.Array]:
+    """Sparse representation of a batch index map (paper §3.1, fig. 2).
+
+    For idx of shape [b, n], returns (base [n], delta_mask [b, n]) where
+    ``base[j]`` is the most frequent index at sequence location j and
+    ``delta_mask[i, j] = idx[i, j] != base[j]``. The number of True entries in
+    delta_mask is the O(b) side of the paper's O(n+b) storage bound.
+    """
+    idx = c.idx
+    assert idx.ndim == 2, "base_and_deltas expects a [batch, seq] index map"
+    # Mode along the batch axis, computed via one-hot counting over capacity.
+    counts = jax.nn.one_hot(idx, c.capacity, dtype=jnp.int32).sum(axis=0)  # [n, cap]
+    base = jnp.argmax(counts, axis=-1).astype(jnp.int32)  # [n]
+    delta_mask = idx != base[None, :]
+    return base, delta_mask

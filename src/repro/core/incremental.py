@@ -1,0 +1,731 @@
+"""The paper's incremental-inference engine for VQ-Transformers (§3, App. A).
+
+Processes *edits* to a cached document instead of re-running the model:
+
+* per-location ops (norms, QKV/FFN projections) run only at *dirty*
+  positions (§3.2 — across a batch of revisions this is the compressed-
+  format trick; for a single edited document the unique rows ARE the dirty
+  positions);
+* self-attention is patched row/column-wise (App. A.1): an edited position
+  contributes one changed query row (recompute that row) and one changed
+  key/value column (patch all later rows' accumulated sums);
+* the VQ score trick (App. A.2): because attention is linear in V, we track
+  the per-row *codebook scores* ``T[i,h,c] = Σ_j w[h,i,j] · (v[j,h]·C_c)``
+  instead of the attention output itself, so re-quantization after a patch
+  costs O(q) per row, and the quantized output is reconstructed from the
+  precomputed ``C @ W_o`` table in O(h·d);
+* positions whose VQ code did **not** change stop propagating — the paper's
+  central filtering effect. The dirty set of layer l+1 is
+  ``{code changed} ∪ {residual input changed}``.
+
+The engine is a host-side (NumPy) dynamic-shape implementation — the paper's
+evaluation metric is *counted arithmetic operations*, not wall-clock, and
+every operation is metered through ``OpCounter`` with the same conventions as
+the dense baseline (``opcount.dense_transformer_forward_ops``). The
+TPU-native static-bucket variant lives in ``repro.serving`` / ``repro.kernels``.
+
+Exactness invariant (tested): incremental state == ``full_forward`` of the
+edited document, bit-for-bit in float32 (same primitive order for patched
+quantities, same codes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.edits import Edit
+from repro.core.opcount import OpCounter
+
+_SQRT_2_OVER_PI = np.sqrt(2.0 / np.pi).astype(np.float32)
+
+
+def gelu(x: np.ndarray) -> np.ndarray:
+    """tanh-approximate GELU, matching jax.nn.gelu(approximate=True)."""
+    x = x.astype(np.float32)
+    return 0.5 * x * (1.0 + np.tanh(_SQRT_2_OVER_PI * (x + 0.044715 * x ** 3)))
+
+
+def layernorm(x: np.ndarray, scale: np.ndarray, bias: np.ndarray, eps=1e-5) -> np.ndarray:
+    mu = x.mean(-1, keepdims=True)
+    var = x.var(-1, keepdims=True)
+    return (x - mu) / np.sqrt(var + eps) * scale + bias
+
+
+@dataclass
+class LayerWeights:
+    ln1_s: np.ndarray
+    ln1_b: np.ndarray
+    wq: np.ndarray  # [d, H, dh]
+    bq: np.ndarray  # [H, dh]
+    wk: np.ndarray
+    bk: np.ndarray
+    wv: np.ndarray
+    bv: np.ndarray
+    bo: np.ndarray  # [d]
+    ln2_s: np.ndarray
+    ln2_b: np.ndarray
+    w_up: np.ndarray
+    b_up: np.ndarray
+    w_down: np.ndarray
+    b_down: np.ndarray
+    # VQ tables
+    codebook: np.ndarray  # [hq, Q, d_vq]  (d_vq = H*dh / hq)
+    vq_bias: np.ndarray  # [hq, Q] = -||C||^2/2
+    c_wo: np.ndarray  # [hq, Q, d]  codebook rows pushed through W_o
+
+
+@dataclass
+class LayerState:
+    """Cached per-layer activations for one document."""
+
+    q: np.ndarray  # [n, H, dh]
+    k: np.ndarray
+    v: np.ndarray
+    vc: np.ndarray  # [n, H, Q] per-head value·codebook inner products
+    T: np.ndarray  # [n, H, Q] accumulated w̃·vc sums (unnormalized scores)
+    codes: np.ndarray  # [n, hq] int32
+
+    def copy(self) -> "LayerState":
+        return LayerState(*(a.copy() for a in dataclasses.astuple(self)))
+
+
+@dataclass
+class DocState:
+    tokens: np.ndarray  # [n] int
+    positions: np.ndarray  # [n] int (gapped ids; order == sequence order)
+    xs: list  # L+1 residual-stream snapshots [n, d]
+    layers: list  # list[LayerState]
+
+    @property
+    def n(self) -> int:
+        return len(self.tokens)
+
+    def copy(self) -> "DocState":
+        return DocState(
+            self.tokens.copy(),
+            self.positions.copy(),
+            [x.copy() for x in self.xs],
+            [l.copy() for l in self.layers],
+        )
+
+
+def _flatten_stage_params(params: dict, cfg: ArchConfig) -> list[dict]:
+    import jax
+
+    out = []
+    for (pattern, repeat), sp in zip(cfg.stages, params["stages"]):
+        for r in range(repeat):
+            layer_params = jax.tree.map(lambda a: np.asarray(a[r]), sp)
+            out.extend(layer_params)
+    return out
+
+
+class IncrementalEngine:
+    """Incremental inference for a VQT model (gqa mixer, dense FFN, σ-attention,
+    multi-head VQ on attention outputs, absolute positional embeddings)."""
+
+    def __init__(self, params: dict, cfg: ArchConfig, counter: Optional[OpCounter] = None):
+        assert cfg.vqt is not None, "IncrementalEngine requires a VQT config"
+        assert not cfg.attn_softmax, "VQT uses element-wise σ attention (paper eq. 1)"
+        assert cfg.pos in ("learned", "sampled"), "VQT uses absolute positional embeddings"
+        for layer in cfg.layer_list():
+            assert layer.mixer == "gqa" and layer.ffn in ("gelu", "relu", "relu2"), (
+                "engine supports the paper's OPT-style blocks; "
+                f"got mixer={layer.mixer} ffn={layer.ffn}"
+            )
+        assert cfg.n_kv_heads == cfg.n_heads, "engine assumes MHA (OPT)"
+        self.cfg = cfg
+        self.counter = counter if counter is not None else OpCounter()
+        self.H = cfg.n_heads
+        self.dh = cfg.resolved_head_dim
+        self.d = cfg.d_model
+        self.scale = np.float32(self.dh ** -0.5)
+        self.hq = cfg.vqt.n_heads
+        self.Q = cfg.vqt.codebook_size
+        self.d_vq = (self.H * self.dh) // self.hq
+        self.heads_per_vq = self.H // self.hq
+        assert self.H % self.hq == 0, "attention heads must split evenly across VQ heads"
+
+        emb = params["embed"]
+        self.tok_emb = np.asarray(emb["tok"], np.float32)
+        self.pos_emb = np.asarray(emb["pos"], np.float32)
+        self.fn_s = np.asarray(params["final_norm"]["scale"], np.float32)
+        self.fn_b = np.asarray(params["final_norm"]["bias"], np.float32)
+        self.head_w = (
+            self.tok_emb.T if cfg.tie_embeddings else np.asarray(params["lm_head"], np.float32)
+        )
+
+        self.layers: list[LayerWeights] = []
+        for lp in _flatten_stage_params(params, cfg):
+            mp = lp["mixer"]
+            d, H, dh = self.d, self.H, self.dh
+            cb = np.asarray(mp["vq"].codebook, np.float32)  # [hq, Q, d_vq]
+            wo = np.asarray(mp["wo"], np.float32)  # [H*dh, d]
+            c_wo = np.einsum(
+                "hqv,hvd->hqd", cb, wo.reshape(self.hq, self.d_vq, d)
+            )  # [hq, Q, d]
+            self.layers.append(
+                LayerWeights(
+                    ln1_s=np.asarray(lp["norm1"]["scale"], np.float32),
+                    ln1_b=np.asarray(lp["norm1"]["bias"], np.float32),
+                    wq=np.asarray(mp["wq"], np.float32).reshape(d, H, dh),
+                    bq=np.asarray(mp["bq"], np.float32).reshape(H, dh),
+                    wk=np.asarray(mp["wk"], np.float32).reshape(d, H, dh),
+                    bk=np.asarray(mp["bk"], np.float32).reshape(H, dh),
+                    wv=np.asarray(mp["wv"], np.float32).reshape(d, H, dh),
+                    bv=np.asarray(mp["bv"], np.float32).reshape(H, dh),
+                    bo=np.asarray(mp["bo"], np.float32),
+                    ln2_s=np.asarray(lp["norm2"]["scale"], np.float32),
+                    ln2_b=np.asarray(lp["norm2"]["bias"], np.float32),
+                    w_up=np.asarray(lp["ffn"]["w_up"], np.float32),
+                    b_up=np.asarray(lp["ffn"]["b_up"], np.float32),
+                    w_down=np.asarray(lp["ffn"]["w_down"], np.float32),
+                    b_down=np.asarray(lp["ffn"]["b_down"], np.float32),
+                    codebook=cb,
+                    vq_bias=-0.5 * np.sum(cb ** 2, axis=-1),
+                    c_wo=c_wo,
+                )
+            )
+
+    # ------------------------------------------------------------- pieces
+
+    def _embed(self, tokens: np.ndarray, positions: np.ndarray) -> np.ndarray:
+        self.counter.elementwise("embed", tokens.size * self.d)
+        return self.tok_emb[tokens] + self.pos_emb[positions]
+
+    def _qkv_at(self, W: LayerWeights, x_rows: np.ndarray):
+        """Per-location: LN1 + QKV projections for a set of rows [m, d]."""
+        m = x_rows.shape[0]
+        self.counter.elementwise("perloc_ln", m * self.d, 8)
+        h = layernorm(x_rows, W.ln1_s, W.ln1_b)
+        self.counter.matmul("perloc_qkv", m, self.d, 3 * self.H * self.dh)
+        q = np.einsum("md,dhe->mhe", h, W.wq) + W.bq
+        k = np.einsum("md,dhe->mhe", h, W.wk) + W.bk
+        v = np.einsum("md,dhe->mhe", h, W.wv) + W.bv
+        return q, k, v
+
+    def _vc_of(self, W: LayerWeights, v_rows: np.ndarray) -> np.ndarray:
+        """v rows [m, H, dh] -> per-attention-head codebook products [m, H, Q]."""
+        m = v_rows.shape[0]
+        # codebook resliced so each attention head sees its span of the VQ chunk:
+        # [hq, Q, heads_per_vq, dh] -> [hq, heads_per_vq, Q, dh] -> [H, Q, dh]
+        cb = W.codebook.reshape(self.hq, self.Q, self.heads_per_vq, self.dh)
+        cb_per_head = cb.transpose(0, 2, 1, 3).reshape(self.H, self.Q, self.dh)
+        self.counter.matmul("vq_vc", m * self.H, self.dh, self.Q)
+        return np.einsum("mhe,hqe->mhq", v_rows, cb_per_head)
+
+    def _row_scores(self, W: LayerWeights, q_rows: np.ndarray, st: LayerState,
+                    row_idx: np.ndarray) -> np.ndarray:
+        """Full row recompute of T for query rows (App. A.1 'altered rows').
+
+        q_rows: [m, H, dh] for rows row_idx (sorted). Returns T rows [m, H, Q].
+        """
+        m = len(row_idx)
+        if m == 0:
+            return np.zeros((0, self.H, self.Q), np.float32)
+        n = st.k.shape[0]
+        self.counter.matmul("attn_row_scores", m * self.H, self.dh, n)
+        s = np.einsum("mhe,jhe->mhj", q_rows, st.k) * self.scale  # [m, H, n]
+        self.counter.elementwise("attn_sigma", m * self.H * n)
+        w = gelu(s)
+        # causal mask: row i attends to j <= i
+        mask = np.arange(n)[None, :] <= row_idx[:, None]  # [m, n]
+        w = w * mask[:, None, :]
+        self.counter.matmul("attn_row_accum", m * self.H, n, self.Q)
+        return np.einsum("mhj,jhq->mhq", w, st.vc)
+
+    def _codes_of(self, T_rows: np.ndarray, W: LayerWeights, counts: np.ndarray) -> np.ndarray:
+        """T rows [m, H, Q] + attended counts [m] -> VQ codes [m, hq]."""
+        m = T_rows.shape[0]
+        s = T_rows.reshape(m, self.hq, self.heads_per_vq, self.Q).sum(2)  # [m, hq, Q]
+        s = s / counts[:, None, None] + W.vq_bias[None]
+        self.counter.elementwise("vq_argmax", m * self.hq * self.Q, 2)
+        return np.argmax(s, axis=-1).astype(np.int32)
+
+    def _attn_out(self, W: LayerWeights, codes: np.ndarray) -> np.ndarray:
+        """Quantized attention output via the precomputed C@W_o table [m, d]."""
+        m = codes.shape[0]
+        self.counter.elementwise("attn_out_lookup", m * self.hq * self.d)
+        out = W.bo[None, :].repeat(m, 0)
+        for h in range(self.hq):
+            out += W.c_wo[h][codes[:, h]]
+        return out
+
+    def _ffn_at(self, W: LayerWeights, x_rows: np.ndarray) -> np.ndarray:
+        m = x_rows.shape[0]
+        self.counter.elementwise("perloc_ln", m * self.d, 8)
+        h = layernorm(x_rows, W.ln2_s, W.ln2_b)
+        self.counter.matmul("perloc_ffn", m, self.d, self.cfg.d_ff)
+        u = h @ W.w_up + W.b_up
+        self.counter.elementwise("ffn_gelu", m * self.cfg.d_ff)
+        u = gelu(u)
+        self.counter.matmul("perloc_ffn", m, self.cfg.d_ff, self.d)
+        return u @ W.w_down + W.b_down
+
+    # ------------------------------------------------------------- full pass
+
+    def full_forward(self, tokens: Sequence[int], positions: Sequence[int]) -> DocState:
+        tokens = np.asarray(tokens, np.int64)
+        positions = np.asarray(positions, np.int64)
+        n = len(tokens)
+        x = self._embed(tokens, positions)
+        xs = [x.copy()]
+        layers = []
+        counts = np.arange(1, n + 1, dtype=np.float32)
+        all_rows = np.arange(n)
+        for W in self.layers:
+            q, k, v = self._qkv_at(W, x)
+            vc = self._vc_of(W, v)
+            st = LayerState(q=q, k=k, v=v, vc=vc, T=None, codes=None)  # type: ignore
+            st.T = self._row_scores(W, q, st, all_rows)
+            st.codes = self._codes_of(st.T, W, counts)
+            x = x + self._attn_out(W, st.codes)
+            self.counter.elementwise("residual", n * self.d)
+            x = x + self._ffn_at(W, x)
+            self.counter.elementwise("residual", n * self.d)
+            layers.append(st)
+            xs.append(x.copy())
+        return DocState(tokens, positions, xs, layers)
+
+    # ------------------------------------------------------------- edits
+
+    def apply_replaces(self, state: DocState, pos_list: Sequence[int],
+                       new_tokens: Sequence[int]) -> DocState:
+        """Batched token replacement (offline revisions collapse to this after
+        alignment). Dirty-set propagation per §3.2 / App. A.1."""
+        state = state.copy()
+        order = np.argsort(np.asarray(pos_list))
+        D = np.asarray(pos_list, np.int64)[order]
+        state.tokens[D] = np.asarray(new_tokens, np.int64)[order]
+        n = state.n
+        counts = np.arange(1, n + 1, dtype=np.float32)
+
+        new_x_rows = self._embed(state.tokens[D], state.positions[D])
+        dirty = D
+        x_prev_rows = new_x_rows  # new residual-stream rows at `dirty`
+        for li, W in enumerate(self.layers):
+            st = state.layers[li]
+            x_in = state.xs[li]
+            # 1. per-location updates at dirty rows
+            old_k = st.k[dirty].copy()
+            old_vc = st.vc[dirty].copy()
+            x_in[dirty] = x_prev_rows
+            q_new, k_new, v_new = self._qkv_at(W, x_prev_rows)
+            vc_new = self._vc_of(W, v_new)
+            st.q[dirty], st.k[dirty], st.v[dirty], st.vc[dirty] = q_new, k_new, v_new, vc_new
+
+            # 2a. column patches: rows i > min(dirty), i not dirty
+            #     ΔT[i] = Σ_{j∈dirty, j<=i} w̃_new[i,j]·vc_new[j] − w̃_old[i,j]·vc_old[j]
+            first = int(dirty.min())
+            later = np.setdiff1d(np.arange(first, n), dirty, assume_unique=False)
+            if len(later) > 0:
+                q_rows = st.q[later]  # unchanged queries
+                self.counter.matmul("attn_col_scores", len(later) * self.H, self.dh,
+                                    2 * len(dirty))
+                s_new = np.einsum("mhe,jhe->mhj", q_rows, k_new) * self.scale
+                s_old = np.einsum("mhe,jhe->mhj", q_rows, old_k) * self.scale
+                self.counter.elementwise("attn_sigma", 2 * len(later) * self.H * len(dirty))
+                w_new, w_old = gelu(s_new), gelu(s_old)
+                mask = dirty[None, :] <= later[:, None]  # causal: col j <= row i
+                w_new = w_new * mask[:, None, :]
+                w_old = w_old * mask[:, None, :]
+                self.counter.matmul("attn_col_patch", len(later) * self.H, len(dirty),
+                                    2 * self.Q)
+                st.T[later] += np.einsum("mhj,jhq->mhq", w_new, vc_new) - np.einsum(
+                    "mhj,jhq->mhq", w_old, old_vc
+                )
+            # 2b. dirty rows: full row recompute
+            st.T[dirty] = self._row_scores(W, q_new, st, dirty)
+
+            # 3. re-quantize affected rows; filtering = unchanged codes stop here
+            affected = np.union1d(later, dirty) if len(later) else dirty
+            new_codes = self._codes_of(st.T[affected], W, counts[affected])
+            code_changed = affected[np.any(new_codes != st.codes[affected], axis=1)]
+            st.codes[affected] = new_codes
+            changed = np.union1d(code_changed, dirty)
+
+            # 4. rebuild residual stream at changed rows only
+            x_mid_rows = x_in[changed] + self._attn_out(W, st.codes[changed])
+            self.counter.elementwise("residual", len(changed) * self.d)
+            x_out_rows = x_mid_rows + self._ffn_at(W, x_mid_rows)
+            self.counter.elementwise("residual", len(changed) * self.d)
+            state.xs[li + 1][changed] = x_out_rows
+            dirty = changed
+            x_prev_rows = x_out_rows
+        return state
+
+    def _renumber_insert(self, state: DocState, p: int, token: int, position_id: int) -> None:
+        """Grow every cached array by one row at sequence index p."""
+        state.tokens = np.insert(state.tokens, p, token)
+        state.positions = np.insert(state.positions, p, position_id)
+        for li in range(len(self.layers)):
+            st = state.layers[li]
+            for name in ("q", "k", "v", "vc", "T"):
+                arr = getattr(st, name)
+                setattr(st, name, np.insert(arr, p, 0.0, axis=0))
+            st.codes = np.insert(st.codes, p, 0, axis=0)
+        state.xs = [np.insert(x, p, 0.0, axis=0) for x in state.xs]
+
+    def apply_insert(self, state: DocState, p: int, token: int, position_id: int) -> DocState:
+        """Insert a token before sequence index p with a pre-allocated gapped
+        position id (paper §3.3). Later rows gain one attended column and a
+        renormalization; the new row is computed like a dirty row."""
+        state = state.copy()
+        self._renumber_insert(state, p, token, position_id)
+        n = state.n
+        counts = np.arange(1, n + 1, dtype=np.float32)
+        x_new = self._embed(state.tokens[p : p + 1], state.positions[p : p + 1])
+        dirty = np.array([p])
+        x_prev_rows = x_new
+        for li, W in enumerate(self.layers):
+            st = state.layers[li]
+            x_in = state.xs[li]
+            # the inserted row itself (always dirty) + any propagated rows
+            x_in[dirty] = x_prev_rows
+            q_new, k_new, v_new = self._qkv_at(W, x_prev_rows)
+            vc_new = self._vc_of(W, v_new)
+            # rows at/after the *insert point* see a new column & count change;
+            # rows in `dirty` (propagated) need handling like replaces.
+            insert_dirty = dirty[dirty == p]
+            repl_dirty = dirty[dirty != p]
+            old_k = st.k[repl_dirty].copy()
+            old_vc = st.vc[repl_dirty].copy()
+            st.q[dirty], st.k[dirty], st.v[dirty], st.vc[dirty] = q_new, k_new, v_new, vc_new
+
+            later = np.setdiff1d(np.arange(p, n), dirty)
+            if len(later) > 0:
+                q_rows = st.q[later]
+                # new column at p (always present for rows > p)
+                self.counter.matmul("attn_col_scores", len(later) * self.H, self.dh, 1)
+                s_p = np.einsum("mhe,he->mh", q_rows, st.k[p]) * self.scale
+                self.counter.elementwise("attn_sigma", len(later) * self.H)
+                w_p = gelu(s_p)
+                self.counter.matmul("attn_col_patch", len(later) * self.H, 1, self.Q)
+                st.T[later] += w_p[..., None] * st.vc[p][None]
+                # replaced (propagated) columns among dirty rows
+                if len(repl_dirty) > 0:
+                    self.counter.matmul(
+                        "attn_col_scores", len(later) * self.H, self.dh, 2 * len(repl_dirty)
+                    )
+                    s_new = np.einsum("mhe,jhe->mhj", q_rows, st.k[repl_dirty]) * self.scale
+                    s_old = np.einsum("mhe,jhe->mhj", q_rows, old_k) * self.scale
+                    self.counter.elementwise(
+                        "attn_sigma", 2 * len(later) * self.H * len(repl_dirty)
+                    )
+                    w_new, w_old = gelu(s_new), gelu(s_old)
+                    mask = repl_dirty[None, :] <= later[:, None]
+                    w_new, w_old = w_new * mask[:, None, :], w_old * mask[:, None, :]
+                    self.counter.matmul(
+                        "attn_col_patch", len(later) * self.H, len(repl_dirty), 2 * self.Q
+                    )
+                    st.T[later] += np.einsum(
+                        "mhj,jhq->mhq", w_new, st.vc[repl_dirty]
+                    ) - np.einsum("mhj,jhq->mhq", w_old, old_vc)
+            st.T[dirty] = self._row_scores(W, st.q[dirty], st, dirty)
+
+            affected = np.union1d(later, dirty) if len(later) else dirty
+            # count renormalization shifts all rows >= p (handled in _codes_of
+            # via the counts vector, which already reflects the new length)
+            new_codes = self._codes_of(st.T[affected], W, counts[affected])
+            code_changed = affected[np.any(new_codes != st.codes[affected], axis=1)]
+            st.codes[affected] = new_codes
+            changed = np.union1d(code_changed, dirty)
+
+            x_mid_rows = x_in[changed] + self._attn_out(W, st.codes[changed])
+            self.counter.elementwise("residual", len(changed) * self.d)
+            x_out_rows = x_mid_rows + self._ffn_at(W, x_mid_rows)
+            self.counter.elementwise("residual", len(changed) * self.d)
+            state.xs[li + 1][changed] = x_out_rows
+            dirty = changed
+            x_prev_rows = x_out_rows
+        return state
+
+    def apply_delete(self, state: DocState, p: int) -> DocState:
+        """Delete the token at sequence index p. Later rows lose one column
+        (patch T by subtraction) and renormalize."""
+        state = state.copy()
+        n_old = state.n
+        # subtract the deleted column's contribution from all later rows
+        for li, W in enumerate(self.layers):
+            st = state.layers[li]
+            later = np.arange(p + 1, n_old)
+            if len(later) > 0:
+                q_rows = st.q[later]
+                self.counter.matmul("attn_col_scores", len(later) * self.H, self.dh, 1)
+                s_p = np.einsum("mhe,he->mh", q_rows, st.k[p]) * self.scale
+                self.counter.elementwise("attn_sigma", len(later) * self.H)
+                w_p = gelu(s_p)
+                self.counter.matmul("attn_col_patch", len(later) * self.H, 1, self.Q)
+                st.T[later] -= w_p[..., None] * st.vc[p][None]
+        # shrink every cached array
+        state.tokens = np.delete(state.tokens, p)
+        state.positions = np.delete(state.positions, p)
+        for li in range(len(self.layers)):
+            st = state.layers[li]
+            for name in ("q", "k", "v", "vc", "T"):
+                setattr(st, name, np.delete(getattr(st, name), p, axis=0))
+            st.codes = np.delete(st.codes, p, axis=0)
+        state.xs = [np.delete(x, p, axis=0) for x in state.xs]
+        n = state.n
+        counts = np.arange(1, n + 1, dtype=np.float32)
+
+        # re-quantize rows >= p (count renormalization) and propagate
+        dirty = np.zeros((0,), np.int64)
+        x_prev_rows = np.zeros((0, self.d), np.float32)
+        for li, W in enumerate(self.layers):
+            st = state.layers[li]
+            x_in = state.xs[li]
+            old_k = st.k[dirty].copy()
+            old_vc = st.vc[dirty].copy()
+            x_in[dirty] = x_prev_rows
+            if len(dirty) > 0:
+                q_new, k_new, v_new = self._qkv_at(W, x_prev_rows)
+                vc_new = self._vc_of(W, v_new)
+                st.q[dirty], st.k[dirty], st.v[dirty], st.vc[dirty] = (
+                    q_new, k_new, v_new, vc_new,
+                )
+            later = np.setdiff1d(np.arange(p, n), dirty)
+            if len(later) > 0 and len(dirty) > 0:
+                q_rows = st.q[later]
+                self.counter.matmul(
+                    "attn_col_scores", len(later) * self.H, self.dh, 2 * len(dirty)
+                )
+                s_new = np.einsum("mhe,jhe->mhj", q_rows, st.k[dirty]) * self.scale
+                s_old = np.einsum("mhe,jhe->mhj", q_rows, old_k) * self.scale
+                self.counter.elementwise("attn_sigma", 2 * len(later) * self.H * len(dirty))
+                w_new, w_old = gelu(s_new), gelu(s_old)
+                mask = dirty[None, :] <= later[:, None]
+                w_new, w_old = w_new * mask[:, None, :], w_old * mask[:, None, :]
+                self.counter.matmul(
+                    "attn_col_patch", len(later) * self.H, len(dirty), 2 * self.Q
+                )
+                st.T[later] += np.einsum("mhj,jhq->mhq", w_new, st.vc[dirty]) - np.einsum(
+                    "mhj,jhq->mhq", w_old, old_vc
+                )
+            if len(dirty) > 0:
+                st.T[dirty] = self._row_scores(W, st.q[dirty], st, dirty)
+            affected = np.union1d(later, dirty)
+            if len(affected) == 0:
+                continue
+            new_codes = self._codes_of(st.T[affected], W, counts[affected])
+            code_changed = affected[np.any(new_codes != st.codes[affected], axis=1)]
+            st.codes[affected] = new_codes
+            changed = np.union1d(code_changed, dirty).astype(np.int64)
+
+            x_mid_rows = x_in[changed] + self._attn_out(W, st.codes[changed])
+            self.counter.elementwise("residual", len(changed) * self.d)
+            x_out_rows = x_mid_rows + self._ffn_at(W, x_mid_rows)
+            self.counter.elementwise("residual", len(changed) * self.d)
+            state.xs[li + 1][changed] = x_out_rows
+            dirty = changed
+            x_prev_rows = x_out_rows
+        return state
+
+    def apply_revision(self, state: DocState, new_tokens: Sequence[int],
+                       allocator=None) -> DocState:
+        """Offline batch path (paper §3 / App. A.1): align a whole revision
+        against the cached document and process ALL structural changes in a
+        single pass per layer — one column-patch sweep instead of one per
+        edit. Falls back to a (counted) full forward when the positional
+        gaps cannot host the inserted tokens.
+        """
+        import difflib
+
+        old_tokens = state.tokens
+        new_tokens = np.asarray(list(new_tokens), np.int64)
+        sm = difflib.SequenceMatcher(a=list(old_tokens), b=list(new_tokens),
+                                     autojunk=False)
+        kept_old, kept_new = [], []
+        m0 = None  # first new index affected by any change
+        for tag, i1, i2, j1, j2 in sm.get_opcodes():
+            if tag == "equal":
+                kept_old.extend(range(i1, i2))
+                kept_new.extend(range(j1, j2))
+            elif m0 is None:
+                m0 = j1
+        if m0 is None:  # identical revision
+            return state.copy()
+        kept_old = np.asarray(kept_old, np.int64)
+        kept_new = np.asarray(kept_new, np.int64)
+        n_new = len(new_tokens)
+        fresh = np.setdiff1d(np.arange(n_new), kept_new)
+        removed_old = np.setdiff1d(np.arange(state.n), kept_old)
+
+        # ---- position ids: kept rows keep theirs; fresh runs get mid-gap ids
+        new_positions = np.full(n_new, -1, np.int64)
+        new_positions[kept_new] = state.positions[kept_old]
+        pool = self.pos_emb.shape[0]
+        ok = True
+        i = 0
+        while i < n_new:
+            if new_positions[i] >= 0:
+                i += 1
+                continue
+            run_start = i
+            while i < n_new and new_positions[i] < 0:
+                i += 1
+            lo = new_positions[run_start - 1] if run_start > 0 else -1
+            hi = new_positions[i] if i < n_new else pool
+            run = i - run_start
+            if hi - lo - 1 < run:
+                ok = False
+                break
+            for k in range(run):
+                new_positions[run_start + k] = lo + (hi - lo) * (k + 1) // (run + 1)
+            if len(set(new_positions[run_start:i])) != run:
+                ok = False
+                break
+        if not ok:
+            # defragment: every id changes -> full recompute (counted)
+            if allocator is not None:
+                allocator.positions = [0] * n_new
+                allocator.defragment()
+                pos = np.asarray(allocator.positions)
+            else:
+                from repro.core.positional import spread_positions
+
+                pos = spread_positions(n_new, pool)
+            return self.full_forward(new_tokens, pos)
+        if allocator is not None:
+            allocator.positions = [int(p) for p in new_positions]
+
+        out = DocState(new_tokens.copy(), new_positions, [], [])
+        counts = np.arange(1, n_new + 1, dtype=np.float32)
+        value_dirty = fresh  # rows whose residual input changed (new indexing)
+        x_dirty_rows = self._embed(new_tokens[fresh], new_positions[fresh])
+        for li, W in enumerate(self.layers):
+            old_st = state.layers[li]
+            old_x = state.xs[li]
+            # structural copy of the residual-stream input
+            x_in = np.zeros((n_new, self.d), np.float32)
+            x_in[kept_new] = old_x[kept_old]
+            x_in[value_dirty] = x_dirty_rows
+            st = LayerState(
+                q=np.zeros((n_new, self.H, self.dh), np.float32),
+                k=np.zeros((n_new, self.H, self.dh), np.float32),
+                v=np.zeros((n_new, self.H, self.dh), np.float32),
+                vc=np.zeros((n_new, self.H, self.Q), np.float32),
+                T=np.zeros((n_new, self.H, self.Q), np.float32),
+                codes=np.zeros((n_new, self.hq), np.int32),
+            )
+            for name in ("q", "k", "v", "vc", "T"):
+                getattr(st, name)[kept_new] = getattr(old_st, name)[kept_old]
+            st.codes[kept_new] = old_st.codes[kept_old]
+            # per-location updates at value-dirty rows
+            q_new, k_new, v_new = self._qkv_at(W, x_in[value_dirty])
+            vc_new = self._vc_of(W, v_new)
+            st.q[value_dirty], st.k[value_dirty] = q_new, k_new
+            st.v[value_dirty], st.vc[value_dirty] = v_new, vc_new
+
+            # ---- single column-patch sweep over stable kept rows ----
+            stable = kept_new[kept_new >= m0]
+            stable = np.setdiff1d(stable, value_dirty)
+            if len(stable) > 0:
+                q_rows = st.q[stable]  # unchanged queries
+                # (a) subtract columns that vanished or changed value:
+                #     removed old columns + old values of value-dirty kept rows
+                vdirty_kept_old = kept_old[np.isin(kept_new, value_dirty)]
+                sub_old = np.concatenate([removed_old, vdirty_kept_old])
+                if len(sub_old) > 0:
+                    stable_old = kept_old[np.isin(kept_new, stable)]
+                    self.counter.matmul("attn_col_scores", len(stable) * self.H,
+                                        self.dh, len(sub_old))
+                    s_old = np.einsum("mhe,jhe->mhj", q_rows, old_st.k[sub_old]) \
+                        * self.scale
+                    self.counter.elementwise(
+                        "attn_sigma", len(stable) * self.H * len(sub_old))
+                    w_old = gelu(s_old) * (sub_old[None, :] <= stable_old[:, None]
+                                           )[:, None, :]
+                    self.counter.matmul("attn_col_patch", len(stable) * self.H,
+                                        len(sub_old), self.Q)
+                    st.T[stable] -= np.einsum("mhj,jhq->mhq", w_old,
+                                              old_st.vc[sub_old])
+                # (b) add new/changed columns (new indexing)
+                add_new = np.union1d(fresh, value_dirty)
+                if len(add_new) > 0:
+                    self.counter.matmul("attn_col_scores", len(stable) * self.H,
+                                        self.dh, len(add_new))
+                    s_n = np.einsum("mhe,jhe->mhj", q_rows, st.k[add_new]) * self.scale
+                    self.counter.elementwise(
+                        "attn_sigma", len(stable) * self.H * len(add_new))
+                    w_n = gelu(s_n) * (add_new[None, :] <= stable[:, None])[:, None, :]
+                    self.counter.matmul("attn_col_patch", len(stable) * self.H,
+                                        len(add_new), self.Q)
+                    st.T[stable] += np.einsum("mhj,jhq->mhq", w_n, st.vc[add_new])
+            # dirty rows: full recompute against the new arrays
+            st.T[value_dirty] = self._row_scores(W, st.q[value_dirty], st, value_dirty)
+
+            # re-quantize everything at/after the first edit (count renorm)
+            affected = np.arange(m0, n_new)
+            if len(affected) > 0:
+                new_codes = self._codes_of(st.T[affected], W, counts[affected])
+                code_changed = affected[np.any(new_codes != st.codes[affected], axis=1)]
+                st.codes[affected] = new_codes
+            else:
+                code_changed = np.zeros((0,), np.int64)
+            changed = np.union1d(code_changed, value_dirty).astype(np.int64)
+
+            x_mid = x_in[changed] + self._attn_out(W, st.codes[changed])
+            self.counter.elementwise("residual", len(changed) * self.d)
+            x_out_rows = x_mid + self._ffn_at(W, x_mid)
+            self.counter.elementwise("residual", len(changed) * self.d)
+            out.layers.append(st)
+            out.xs.append(x_in)
+            value_dirty = changed
+            x_dirty_rows = x_out_rows
+        # final residual stream snapshot
+        x_last = np.zeros((n_new, self.d), np.float32)
+        x_last[kept_new] = state.xs[-1][kept_old]
+        x_last[value_dirty] = x_dirty_rows
+        out.xs.append(x_last)
+        return out
+
+    def apply_edit(self, state: DocState, e: Edit, allocator=None) -> DocState:
+        """Apply one atomic edit. For inserts an id is taken from ``allocator``
+        (PositionAllocator); if the gap is exhausted the engine defragments
+        and re-runs a full forward (counted — paper §3.3)."""
+        if e.op == "replace":
+            return self.apply_replaces(state, [e.pos], [e.token])
+        if e.op == "delete":
+            if allocator is not None:
+                allocator.delete_at(e.pos)
+            return self.apply_delete(state, e.pos)
+        # insert
+        if allocator is None:
+            # fabricate a mid-gap id (test paths)
+            lo = state.positions[e.pos - 1] if e.pos > 0 else -1
+            hi = (
+                state.positions[e.pos]
+                if e.pos < state.n
+                else self.pos_emb.shape[0]
+            )
+            if hi - lo <= 1:
+                raise ValueError("no positional gap; provide an allocator")
+            pid = int((lo + hi) // 2)
+        else:
+            pid = allocator.insert_at(e.pos)
+            if pid is None:
+                # defragmentation: every position id changes -> full recompute
+                # (counted; paper §3.3 "akin to defragmentation")
+                allocator.positions.insert(e.pos, -1)  # placeholder, re-spread next
+                new_positions = allocator.defragment()
+                tokens = list(state.tokens)
+                tokens.insert(e.pos, e.token)
+                return self.full_forward(tokens, list(new_positions))
+        return self.apply_insert(state, e.pos, e.token, pid)
+
+    # ------------------------------------------------------------- outputs
+
+    def logits_at(self, state: DocState, row: int = -1) -> np.ndarray:
+        x = state.xs[-1][row]
+        self.counter.elementwise("perloc_ln", self.d, 8)
+        h = layernorm(x[None], self.fn_s, self.fn_b)[0]
+        self.counter.matmul("head", 1, self.d, self.head_w.shape[1])
+        return h @ self.head_w
+
+    def hidden(self, state: DocState) -> np.ndarray:
+        return state.xs[-1]

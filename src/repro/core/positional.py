@@ -1,0 +1,76 @@
+"""Sampled absolute positional embeddings (paper §3.3, App. B).
+
+Training samples a random *ordered* subset of a large positional-embedding
+pool per document, so the network learns to use only the relative order of
+position ids, not their absolute values. At serving time this lets us assign
+*gapped* position ids so that token insertion gets a fresh id between its
+neighbours without shifting anyone else — the key to reusing activations
+across insert/delete edits.
+"""
+from __future__ import annotations
+
+import bisect
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def sample_positions(key: jax.Array, n: int, pool_size: int) -> jax.Array:
+    """Sample a sorted n-subset of [0, pool_size) (training mode)."""
+    if n > pool_size:
+        raise ValueError(f"n={n} > pool_size={pool_size}")
+    # Gumbel top-k trick for sampling without replacement, then sort.
+    g = jax.random.gumbel(key, (pool_size,))
+    _, idx = jax.lax.top_k(g, n)
+    return jnp.sort(idx).astype(jnp.int32)
+
+
+def sample_positions_batch(key: jax.Array, batch: int, n: int, pool_size: int) -> jax.Array:
+    keys = jax.random.split(key, batch)
+    return jax.vmap(lambda k: sample_positions(k, n, pool_size))(keys)
+
+
+def spread_positions(n: int, pool_size: int) -> np.ndarray:
+    """Deterministic serving-time initial assignment: spread ids evenly so
+    every adjacent pair has a gap ~ pool_size/n for future insertions."""
+    return (np.arange(n, dtype=np.int64) * pool_size // max(n, 1)).astype(np.int64)
+
+
+class PositionAllocator:
+    """Host-side position-id allocator for the online editing engine.
+
+    Maintains the sorted list of in-use position ids aligned with the token
+    sequence. ``insert_between`` returns a fresh id strictly between
+    neighbours, or None if the gap is exhausted (caller must defragment —
+    paper: "akin to defragmentation").
+    """
+
+    def __init__(self, n: int, pool_size: int):
+        self.pool_size = int(pool_size)
+        self.positions: list[int] = [int(p) for p in spread_positions(n, pool_size)]
+        self.defrag_count = 0
+
+    def __len__(self) -> int:
+        return len(self.positions)
+
+    def insert_at(self, i: int) -> int | None:
+        """Allocate an id for a token inserted at sequence index i (before the
+        current i-th token). Returns the id, or None if no gap remains."""
+        lo = self.positions[i - 1] if i > 0 else -1
+        hi = self.positions[i] if i < len(self.positions) else self.pool_size
+        if hi - lo <= 1:
+            return None
+        mid = (lo + hi) // 2
+        self.positions.insert(i, mid)
+        return mid
+
+    def delete_at(self, i: int) -> int:
+        return self.positions.pop(i)
+
+    def defragment(self) -> list[int]:
+        """Re-spread all ids evenly. Invalidates cached activations (every
+        position embedding changes) — the engine counts this as a full pass."""
+        self.positions = [int(p) for p in spread_positions(len(self.positions), self.pool_size)]
+        self.defrag_count += 1
+        return self.positions

@@ -1,0 +1,171 @@
+"""Multi-head vector quantization (paper §3 eq. 1, §4).
+
+The paper appends a VQ layer to the self-attention output: each output vector
+is split into ``n_heads`` chunks; each chunk is matched against a per-head
+codebook of ``codebook_size`` vectors (64 in the paper), so the effective
+codebook size is ``codebook_size ** n_heads``.
+
+Training uses a Gumbel-Softmax straight-through pseudo-gradient (paper §4,
+"a variant of the Gumbel-Softmax estimator" of Jang et al. 2017) plus a
+commitment term (van den Oord et al. 2017).
+
+Assignment uses the inner-product form of the Euclidean distance (App. A.2):
+
+    argmin_i ||x - c_i||^2 == argmax_i (x^T c_i - ||c_i||^2 / 2)
+
+which turns the distance computation into a single MXU matmul (see
+``repro.kernels.vq_assign`` for the Pallas kernel of this exact expression).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.pytree import pytree_dataclass, static_field
+
+
+@pytree_dataclass
+class VQParams:
+    # [n_heads, codebook_size, d_head]
+    codebook: jax.Array
+
+
+@pytree_dataclass
+class VQConfig:
+    n_heads: int = static_field(default=2)
+    codebook_size: int = static_field(default=64)
+    commitment_beta: float = static_field(default=0.25)
+    # Gumbel-softmax temperature used during training.
+    temperature: float = static_field(default=1.0)
+
+
+def init(key: jax.Array, d_model: int, cfg: VQConfig, dtype=jnp.float32) -> VQParams:
+    if d_model % cfg.n_heads != 0:
+        raise ValueError(f"d_model={d_model} not divisible by vq heads={cfg.n_heads}")
+    d_head = d_model // cfg.n_heads
+    # Match the typical scale of normalized transformer activations.
+    codebook = jax.random.normal(key, (cfg.n_heads, cfg.codebook_size, d_head)) * 0.5
+    return VQParams(codebook=codebook.astype(dtype))
+
+
+def _split_heads(x: jax.Array, n_heads: int) -> jax.Array:
+    *lead, d = x.shape
+    return x.reshape(*lead, n_heads, d // n_heads)
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    *lead, h, dh = x.shape
+    return x.reshape(*lead, h * dh)
+
+
+def scores(params: VQParams, x: jax.Array) -> jax.Array:
+    """Negative-distance scores per head: [..., n_heads, codebook_size].
+
+    score[i] = x^T c_i - ||c_i||^2 / 2  (monotone in -||x - c_i||^2).
+    """
+    h = params.codebook.shape[0]
+    xh = _split_heads(x, h)  # [..., h, dh]
+    bias = -0.5 * jnp.sum(
+        params.codebook.astype(jnp.float32) ** 2, axis=-1
+    )  # [h, q]
+    dots = jnp.einsum(
+        "...hd,hqd->...hq",
+        xh.astype(jnp.float32),
+        params.codebook.astype(jnp.float32),
+    )
+    return dots + bias
+
+
+def assign(params: VQParams, x: jax.Array) -> jax.Array:
+    """Nearest-codebook indices per head: int32 [..., n_heads]."""
+    return jnp.argmax(scores(params, x), axis=-1).astype(jnp.int32)
+
+
+def lookup(params: VQParams, idx: jax.Array) -> jax.Array:
+    """Gather codebook vectors: idx [..., n_heads] -> [..., d_model]."""
+    # codebook: [h, q, dh]; idx: [..., h]
+    gathered = jnp.take_along_axis(
+        params.codebook[None],  # [1, h, q, dh] broadcast over leading dims
+        idx.reshape(-1, idx.shape[-1])[:, :, None, None],
+        axis=2,
+    )  # [N, h, 1, dh]
+    flat = gathered[:, :, 0, :].reshape(-1, params.codebook.shape[0] * params.codebook.shape[2])
+    return flat.reshape(*idx.shape[:-1], -1)
+
+
+# dispatch hard quantization to the Pallas kernel (repro.kernels.vq_assign).
+# Default off on CPU (interpret mode); a TPU deployment flips this on.
+USE_PALLAS = False
+
+
+def quantize(params: VQParams, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Hard quantization (inference). Returns (x_q, idx)."""
+    if USE_PALLAS:
+        from repro.kernels.vq_assign import vq_assign
+
+        idx, x_q = vq_assign(x, params.codebook)
+        return x_q.astype(x.dtype), idx
+    idx = assign(params, x)
+    return lookup(params, idx).astype(x.dtype), idx
+
+
+def forward_train(
+    params: VQParams,
+    x: jax.Array,
+    cfg: VQConfig,
+    rng: Optional[jax.Array] = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Training-mode VQ with Gumbel-softmax straight-through estimator.
+
+    Returns (x_q_ste, idx, aux_loss). ``x_q_ste`` carries gradients to both
+    the input (straight-through) and the codebook (via the soft assignment).
+    """
+    s = scores(params, x)  # [..., h, q]
+    if rng is not None:
+        gumbel = jax.random.gumbel(rng, s.shape, dtype=s.dtype)
+        logits = (s + gumbel) / cfg.temperature
+    else:
+        logits = s / cfg.temperature
+    soft = jax.nn.softmax(logits, axis=-1)
+    idx = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    hard = jax.nn.one_hot(idx, s.shape[-1], dtype=soft.dtype)
+    # Straight-through on the assignment weights.
+    w = hard + soft - jax.lax.stop_gradient(soft)
+    xq_h = jnp.einsum("...hq,hqd->...hd", w, params.codebook.astype(w.dtype))
+    x_q = _merge_heads(xq_h).astype(x.dtype)
+    # Commitment: pull encoder outputs toward their codes.
+    hard_q = jax.lax.stop_gradient(lookup(params, idx).astype(jnp.float32))
+    commit = jnp.mean((x.astype(jnp.float32) - hard_q) ** 2)
+    # Codebook loss: pull codes toward (stopped) encoder outputs.
+    codebook_loss = jnp.mean(
+        (_merge_heads(xq_h).astype(jnp.float32) - jax.lax.stop_gradient(x.astype(jnp.float32))) ** 2
+    )
+    aux = cfg.commitment_beta * commit + codebook_loss
+    # Straight-through on values as well (gradient flows to x unchanged).
+    x_st = x + jax.lax.stop_gradient(x_q - x)
+    return x_st, idx, aux
+
+
+def combined_code(idx: jax.Array, codebook_size: int) -> jax.Array:
+    """Combine per-head indices [..., h] into a single int32 code.
+
+    With h heads of q entries the effective code space is q**h (paper §4).
+    Requires q**h < 2**31 (h<=4 with q=64 -> 16.7M, fine).
+    """
+    h = idx.shape[-1]
+    code = idx[..., 0].astype(jnp.int32)
+    for i in range(1, h):
+        code = code * codebook_size + idx[..., i].astype(jnp.int32)
+    return code
+
+
+def split_code(code: jax.Array, codebook_size: int, n_heads: int) -> jax.Array:
+    """Inverse of combined_code: [...,] -> [..., h]."""
+    parts = []
+    c = code
+    for _ in range(n_heads):
+        parts.append(c % codebook_size)
+        c = c // codebook_size
+    return jnp.stack(parts[::-1], axis=-1).astype(jnp.int32)

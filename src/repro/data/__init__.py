@@ -1,0 +1,2 @@
+from repro.data.synthetic import SyntheticCorpus, lm_batches
+from repro.data.edit_stream import EditStream, revision_pairs

@@ -1,0 +1,56 @@
+"""Edit-stream generator — the offline stand-in for the paper's scraped
+Wikipedia revision histories (§4).
+
+Produces (base document, revision) pairs with a controlled edit fraction and
+bursty (clustered) edit locations, plus atomic-edit streams for the online
+experiment.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator
+
+import numpy as np
+
+from repro.core.edits import Edit, edit_script, random_atomic_edit, random_revision
+from repro.data.synthetic import SyntheticCorpus
+
+
+@dataclass
+class EditStream:
+    corpus: SyntheticCorpus
+    doc_len: int = 512
+    seed: int = 0
+
+    def base_document(self, i: int) -> np.ndarray:
+        return self.corpus.document(self.doc_len, 50_000 + i)
+
+    def atomic_edits(self, doc_id: int, n_edits: int) -> Iterator[Edit]:
+        """A stream of single-token edits to one document (online case)."""
+        rng = np.random.default_rng((self.seed, doc_id))
+        tokens = list(self.base_document(doc_id))
+        for _ in range(n_edits):
+            e = random_atomic_edit(rng, tokens, self.corpus.vocab)
+            yield e
+            from repro.core.edits import apply_edit
+
+            tokens = apply_edit(tokens, e)
+
+    def revision(self, doc_id: int, edit_fraction: float) -> tuple[np.ndarray, np.ndarray]:
+        """(old, new) revision pair with ~edit_fraction of tokens modified."""
+        rng = np.random.default_rng((self.seed, 1, doc_id))
+        old = self.base_document(doc_id)
+        new = np.asarray(random_revision(rng, old, self.corpus.vocab, edit_fraction))
+        return old, new
+
+
+def revision_pairs(
+    stream: EditStream, n_pairs: int, fractions=(0.002, 0.005, 0.01, 0.02, 0.05, 0.1)
+) -> Iterator[tuple[np.ndarray, np.ndarray, list[Edit], float]]:
+    """Yields (old, new, edit_script, fraction) like the paper's scraped
+    Wikipedia pairs — fraction is drawn log-uniformly from ``fractions``."""
+    rng = np.random.default_rng(stream.seed + 99)
+    for i in range(n_pairs):
+        frac = float(fractions[rng.integers(len(fractions))])
+        old, new = stream.revision(i, frac)
+        yield old, new, edit_script(old, new), frac

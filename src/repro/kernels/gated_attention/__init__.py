@@ -1,0 +1,2 @@
+from repro.kernels.gated_attention.ops import gated_attention
+from repro.kernels.gated_attention.ref import gated_attention_ref

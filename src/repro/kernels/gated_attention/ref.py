@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the gated (σ) attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gated_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Causal σ-attention, count-normalized. q/k: [BH, n, dh]; v: [BH, n, dv].
+    Returns [BH, nq, dv] f32."""
+    BH, nq, dh = q.shape
+    nk = k.shape[1]
+    scale = dh ** -0.5
+    s = jnp.einsum(
+        "bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    mask = jnp.arange(nk)[None, :] <= jnp.arange(nq)[:, None]
+    w = jax.nn.gelu(s, approximate=True) * mask[None].astype(jnp.float32)
+    cnt = jnp.minimum(jnp.arange(nq) + 1, nk).astype(jnp.float32)
+    return jnp.einsum("bqk,bkd->bqd", w, v.astype(jnp.float32)) / cnt[None, :, None]

@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: the incremental attention *column patch* (App. A.1).
+
+When C columns (edited keys/values) change under σ-attention, every later row
+i receives
+
+    ΔT[i, h, :] = Σ_c gelu(q[i,h]·k_new[c,h]·scale) vc_new[c,h,:]
+                − Σ_c gelu(q[i,h]·k_old[c,h]·scale) vc_old[c,h,:]
+
+The TPU adaptation (DESIGN.md §3): edits are bucketed into fixed-capacity
+*dirty-slot* buffers (C = power of two), rows are gathered into dense blocks,
+and the patch is two MXU matmuls per (row-block, head) grid cell:
+
+    s  = q_blk @ k_colsᵀ          [BR, C]   (MXU)
+    w  = gelu(s·scale) ⊙ mask     [BR, C]   (VPU)
+    ΔT = w @ vc_cols              [BR, Q]   (MXU)
+
+computed for (k_new, vc_new) minus (k_old, vc_old) in one pass. Host code
+gathers the dirty rows/columns and scatters ΔT back — both are static-shape
+ops on TPU thanks to the capacity bucketing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, kn_ref, ko_ref, vcn_ref, vco_ref, mask_ref, out_ref, *,
+            scale: float):
+    # q_ref: [BR, 1, dh]; kn/ko: [1, C, dh]; vcn/vco: [1, C, Q];
+    # mask: [BR, C]; out: [BR, 1, Q]
+    q = q_ref[:, 0, :]  # [BR, dh]
+    mask = mask_ref[...].astype(jnp.float32)
+
+    def contrib(k_ref, vc_ref, sign):
+        s = jax.lax.dot_general(
+            q, k_ref[0], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale  # [BR, C]
+        w = jax.nn.gelu(s, approximate=True) * mask
+        return sign * jax.lax.dot_general(
+            w, vc_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # [BR, Q]
+
+    out_ref[:, 0, :] = (contrib(kn_ref, vcn_ref, 1.0)
+                        + contrib(ko_ref, vco_ref, -1.0)).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def incr_patch_kernel(
+    q: jax.Array,  # [R, H, dh] gathered rows-to-patch
+    k_new: jax.Array,  # [H, C, dh] dirty-slot key buffer (new values)
+    k_old: jax.Array,  # [H, C, dh] old values
+    vc_new: jax.Array,  # [H, C, Q] value·codebook products (new)
+    vc_old: jax.Array,  # [H, C, Q]
+    mask: jax.Array,  # [R, C] {0,1}: causal col<=row & slot-occupied
+    *,
+    block_r: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns ΔT [R, H, Q] f32."""
+    R, H, dh = q.shape
+    C = k_new.shape[1]
+    Q = vc_new.shape[-1]
+    scale = dh ** -0.5
+    pad = (-R) % block_r
+    if pad:
+        q = jnp.pad(q, ((0, pad), (0, 0), (0, 0)))
+        mask = jnp.pad(mask, ((0, pad), (0, 0)))
+    Rp = R + pad
+    grid = (Rp // block_r, H)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, 1, dh), lambda i, h: (i, h, 0)),
+            pl.BlockSpec((1, C, dh), lambda i, h: (h, 0, 0)),
+            pl.BlockSpec((1, C, dh), lambda i, h: (h, 0, 0)),
+            pl.BlockSpec((1, C, Q), lambda i, h: (h, 0, 0)),
+            pl.BlockSpec((1, C, Q), lambda i, h: (h, 0, 0)),
+            pl.BlockSpec((block_r, C), lambda i, h: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, 1, Q), lambda i, h: (i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((Rp, H, Q), jnp.float32),
+        interpret=interpret,
+    )(q, k_new, k_old, vc_new, vc_old, mask)
+    return out[:R]

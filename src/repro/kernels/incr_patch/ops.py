@@ -1,0 +1,35 @@
+"""Jit'd wrapper: gather dirty rows, run the Pallas column-patch, return ΔT.
+
+Capacity bucketing: the dirty-column buffers come in power-of-two capacities
+(slots beyond the actual edit count are masked out), so every bucket size is
+a distinct static compile — the standard serving-system bucketing pattern.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.incr_patch.incr_patch import incr_patch_kernel
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:
+        return False
+
+
+def bucket_capacity(n: int, minimum: int = 8) -> int:
+    c = minimum
+    while c < n:
+        c *= 2
+    return c
+
+
+def incr_patch(q, k_new, k_old, vc_new, vc_old, mask, *, block_r: int = 128):
+    """q: [R, H, dh]; k_*: [H, C, dh]; vc_*: [H, C, Q]; mask: [R, C] bool.
+    Returns ΔT [R, H, Q] f32 = new-contribution − old-contribution."""
+    return incr_patch_kernel(
+        q, k_new, k_old, vc_new, vc_old, mask.astype(jnp.float32),
+        block_r=block_r, interpret=not _on_tpu(),
+    )

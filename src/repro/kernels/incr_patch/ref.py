@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the incremental column-patch kernel (and the math the
+NumPy engine performs in ``IncrementalEngine.apply_replaces`` step 2a)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def incr_patch_ref(q, k_new, k_old, vc_new, vc_old, mask) -> jax.Array:
+    """q: [R, H, dh]; k_*: [H, C, dh]; vc_*: [H, C, Q]; mask: [R, C].
+    Returns ΔT [R, H, Q] f32."""
+    dh = q.shape[-1]
+    scale = dh ** -0.5
+
+    def contrib(k, vc, sign):
+        s = jnp.einsum("rhd,hcd->rhc", q.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+        w = jax.nn.gelu(s, approximate=True) * mask[:, None, :]
+        return sign * jnp.einsum("rhc,hcq->rhq", w, vc.astype(jnp.float32))
+
+    return contrib(k_new, vc_new, 1.0) + contrib(k_old, vc_old, -1.0)

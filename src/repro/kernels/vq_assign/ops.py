@@ -1,0 +1,34 @@
+"""Jit'd public wrapper: quantize attention outputs with the Pallas kernel.
+
+Falls back to interpret mode off-TPU (bit-identical math, Python execution of
+the kernel body) so the whole stack runs on CPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.vq_assign.vq_assign import vq_assign_kernel
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:
+        return False
+
+
+def vq_assign(
+    x: jax.Array,  # [..., d] attention outputs
+    codebook: jax.Array,  # [hq, Q, dv] with hq*dv == d
+    *,
+    block_n: int = 256,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (idx [..., hq] int32, x_q [..., d])."""
+    hq, Q, dv = codebook.shape
+    *lead, d = x.shape
+    assert hq * dv == d, (codebook.shape, d)
+    xh = x.reshape(-1, hq, dv)
+    idx, xq = vq_assign_kernel(xh, codebook, block_n=block_n,
+                               interpret=not _on_tpu())
+    return idx.reshape(*lead, hq), xq.reshape(*lead, d).astype(x.dtype)

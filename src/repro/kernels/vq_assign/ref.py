@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the vq_assign kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def vq_assign_ref(xh: jax.Array, codebook: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """xh: [N, hq, dv]; codebook: [hq, Q, dv] -> (idx [N, hq], xq [N, hq, dv])."""
+    bias = -0.5 * jnp.sum(codebook.astype(jnp.float32) ** 2, axis=-1)  # [hq, Q]
+    scores = (
+        jnp.einsum("nhd,hqd->nhq", xh.astype(jnp.float32), codebook.astype(jnp.float32))
+        + bias[None]
+    )
+    idx = jnp.argmax(scores, axis=-1).astype(jnp.int32)
+    xq = jnp.take_along_axis(
+        codebook[None].astype(jnp.float32),
+        idx[:, :, None, None],
+        axis=2,
+    )[:, :, 0, :]
+    return idx, xq.astype(xh.dtype)

@@ -1,0 +1,79 @@
+"""Pallas TPU kernel: multi-head VQ nearest-codebook assignment + lookup.
+
+Implements the paper's App. A.2 inner-product form on the MXU:
+
+    argmin_c ||x - C_c||^2  ==  argmax_c (x·C_c - ||C_c||^2/2)
+
+Per (token-block, vq-head) grid cell:
+  1. scores = x_blk @ C_hᵀ + bias_h           — one [BN, dv]x[dv, Q] MXU matmul
+  2. idx    = row argmax over Q                — VPU reduce
+  3. x_q    = onehot(idx) @ C_h                — gather as a second MXU matmul
+     (TPU-native: avoids a hostile dynamic-gather, and Q=64/128 is one lane
+     tile wide)
+
+VMEM: x block BN×dv (bf16/f32), the head's whole codebook Q×dv, scores BN×Q.
+With BN=256, dv≤512, Q≤256 everything sits well under ~2 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, cb_ref, bias_ref, idx_ref, xq_ref):
+    # x_ref: [BN, 1, dv]; cb_ref: [1, Q, dv]; bias_ref: [1, Q]
+    x = x_ref[:, 0, :].astype(jnp.float32)  # [BN, dv]
+    cb = cb_ref[0].astype(jnp.float32)  # [Q, dv]
+    scores = jax.lax.dot_general(
+        x, cb, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) + bias_ref[0][None, :]  # [BN, Q]
+    idx = jnp.argmax(scores, axis=-1).astype(jnp.int32)  # [BN]
+    onehot = (
+        idx[:, None] == jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    ).astype(jnp.float32)
+    xq = jax.lax.dot_general(
+        onehot, cb, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [BN, dv]
+    idx_ref[:, 0] = idx
+    xq_ref[:, 0, :] = xq.astype(xq_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def vq_assign_kernel(
+    xh: jax.Array,  # [N, hq, dv] tokens split by vq head
+    codebook: jax.Array,  # [hq, Q, dv]
+    *,
+    block_n: int = 256,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (idx [N, hq] int32, xq [N, hq, dv])."""
+    N, hq, dv = xh.shape
+    Q = codebook.shape[1]
+    bias = -0.5 * jnp.sum(codebook.astype(jnp.float32) ** 2, axis=-1)  # [hq, Q]
+    pad = (-N) % block_n
+    if pad:
+        xh = jnp.pad(xh, ((0, pad), (0, 0), (0, 0)))
+    Np = N + pad
+    grid = (Np // block_n, hq)
+    idx, xq = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, 1, dv), lambda i, h: (i, h, 0)),
+            pl.BlockSpec((1, Q, dv), lambda i, h: (h, 0, 0)),
+            pl.BlockSpec((1, Q), lambda i, h: (h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, 1), lambda i, h: (i, h)),
+            pl.BlockSpec((block_n, 1, dv), lambda i, h: (i, h, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Np, hq), jnp.int32),
+            jax.ShapeDtypeStruct((Np, hq, dv), xh.dtype),
+        ],
+        interpret=interpret,
+    )(xh, codebook, bias)
+    return idx[:N], xq[:N]

@@ -1,0 +1,86 @@
+"""Training launcher.
+
+CPU smoke run:
+  PYTHONPATH=src python -m repro.launch.train --arch vq-opt-125m --smoke \
+      --steps 50 --batch 8 --seq 128
+
+On a real TPU slice the same entry point runs the production mesh
+(``--mesh pod|single``) with the sharding rules of ``launch.sharding``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_train_state
+from repro.configs import get_config
+from repro.data import SyntheticCorpus, lm_batches
+from repro.distributed.context import use_mesh
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.sharding import batch_shardings, param_shardings
+from repro.training import make_schedule, make_train_step, train_state_init
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="reduced config")
+    ap.add_argument("--vqt", action="store_true", help="enable the paper's VQT feature")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=10)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--mesh", choices=["host", "single", "pod"], default="host")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    kwargs = {"vqt": True} if args.vqt else {}
+    cfg = get_config(args.arch, smoke=args.smoke, **kwargs)
+    print(f"arch={cfg.name} layers={cfg.n_layers} d={cfg.d_model} vocab={cfg.vocab}")
+
+    if args.mesh == "host":
+        mesh = make_host_mesh()
+    else:
+        mesh = make_production_mesh(multi_pod=args.mesh == "pod")
+
+    sched = make_schedule(peak_lr=args.lr, warmup_steps=args.warmup,
+                          total_steps=args.steps, final_lr=args.lr / 10)
+    corpus = SyntheticCorpus(vocab=cfg.vocab, seed=0)
+
+    with use_mesh(mesh):
+        state = train_state_init(jax.random.PRNGKey(0), cfg)
+        state_sh = param_shardings(state, mesh)
+        state = jax.device_put(state, state_sh)
+        step_fn = jax.jit(
+            make_train_step(cfg, sched, accum_steps=args.accum),
+            in_shardings=(state_sh, None),
+            donate_argnums=(0,),
+        )
+        t0 = time.time()
+        for i, batch in enumerate(
+            lm_batches(corpus, batch=args.batch, seq_len=args.seq, steps=args.steps,
+                       pos_pool=cfg.pos_pool if cfg.pos == "sampled" else None)
+        ):
+            b = {k: jnp.asarray(v) for k, v in batch.items()}
+            state, m = step_fn(state, b)
+            if i % args.log_every == 0 or i == args.steps - 1:
+                print(
+                    f"step {i:5d} loss={float(m['lm_loss']):.4f} "
+                    f"aux={float(m['aux_loss']):.4f} gnorm={float(m['grad_norm']):.3f} "
+                    f"lr={float(m['lr']):.2e} ({time.time()-t0:.1f}s)",
+                    flush=True,
+                )
+    if args.ckpt:
+        save_train_state(args.ckpt, jax.device_get(state), step=args.steps)
+        print(f"saved checkpoint to {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

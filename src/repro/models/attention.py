@@ -1,0 +1,293 @@
+"""GQA attention: RoPE, sliding windows, softmax or the paper's element-wise
+σ attention (eq. 1), and the VQT vector-quantization hook on the concatenated
+head outputs (before the mixing projection, per paper §3).
+
+σ-attention normalization: with an element-wise non-linearity the row sums are
+unbounded in sequence length, so we normalize each output row by the number of
+attended positions. This keeps magnitudes seq-length-stable and remains
+incrementally patchable (a pure per-location rescale; see
+``repro.core.incremental``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerCfg
+from repro.core import vq as vq_mod
+from repro.distributed.context import constrain
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [b, n, h, dh]; positions: [b, n] int."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # [dh/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [b, n, dh/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def attn_init(key: jax.Array, cfg: ArchConfig, layer: LayerCfg, dtype=jnp.float32) -> dict:
+    d, H, Hkv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    dh = cfg.resolved_head_dim
+    ks = jax.random.split(key, 5)
+    s = d ** -0.5
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, H * dh)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, Hkv * dh)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, Hkv * dh)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (H * dh, d)) * (H * dh) ** -0.5).astype(dtype),
+    }
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((H * dh,), dtype)
+        p["bk"] = jnp.zeros((Hkv * dh,), dtype)
+        p["bv"] = jnp.zeros((Hkv * dh,), dtype)
+        p["bo"] = jnp.zeros((d,), dtype)
+    if cfg.vqt is not None:
+        p["vq"] = vq_mod.init(ks[4], H * dh, cfg.vqt, dtype=jnp.float32)
+    return p
+
+
+def _qkv(params: dict, cfg: ArchConfig, x: jax.Array):
+    b, n, _ = x.shape
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    return (
+        q.reshape(b, n, H, dh),
+        k.reshape(b, n, Hkv, dh),
+        v.reshape(b, n, Hkv, dh),
+    )
+
+
+def sigma_attn_weights(scores: jax.Array, mask: jax.Array) -> jax.Array:
+    """Paper eq. 1: element-wise GELU instead of softmax, masked entries 0,
+    rows normalized by their attended count."""
+    w = jax.nn.gelu(scores, approximate=True) * mask
+    counts = jnp.maximum(mask.sum(axis=-1, keepdims=True), 1.0)
+    return w / counts
+
+
+def make_mask(
+    n_q: int,
+    n_k: int,
+    *,
+    causal: bool,
+    window: Optional[int],
+    q_offset=0,
+    valid_k: Optional[jax.Array] = None,
+    dtype=jnp.float32,
+) -> jax.Array:
+    """[1, 1, n_q, n_k] {0,1} mask. q_offset: absolute index of first query
+    (decode: n_q=1, q_offset=cache_len)."""
+    qi = jnp.arange(n_q) + q_offset  # absolute query order indices
+    ki = jnp.arange(n_k)
+    m = jnp.ones((n_q, n_k), bool)
+    if causal:
+        m &= ki[None, :] <= qi[:, None]
+    if window is not None:
+        m &= ki[None, :] > (qi[:, None] - window)
+    m = m[None, None].astype(dtype)
+    if valid_k is not None:  # [b, n_k] validity (padding / ring cache)
+        m = m * valid_k[:, None, None, :].astype(dtype)
+    return m
+
+
+# sequences longer than this use the streaming (flash-style) path; kept as a
+# module attribute so tests can force either path and compare.
+STREAM_THRESHOLD = 2048
+
+# dispatch σ-attention to the Pallas kernel (repro.kernels.gated_attention).
+# Default off on CPU (interpret mode is slow); a TPU deployment flips this on.
+USE_PALLAS_SIGMA = False
+
+
+def full_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softmax: bool = True,
+    valid_k: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Self-attention over a full sequence. Dispatches to the Pallas σ kernel
+    (VQT fast path), else the streaming KV-block path for long sequences
+    (memory: no [n, n] score tensor), else the dense core."""
+    n = q.shape[1]
+    if (USE_PALLAS_SIGMA and not softmax and causal and window is None
+            and valid_k is None):
+        from repro.kernels.gated_attention import gated_attention
+
+        return gated_attention(q, k, v)
+    if n > STREAM_THRESHOLD and valid_k is None:
+        from repro.models.flash import streaming_attention
+
+        return streaming_attention(
+            q, k, v, causal=causal, window=window, softmax=softmax
+        )
+    mask = make_mask(n, k.shape[1], causal=causal, window=window, valid_k=valid_k)
+    return attention_core(q, k, v, mask, softmax=softmax)
+
+
+def attention_core(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    mask: jax.Array,
+    *,
+    softmax: bool,
+) -> jax.Array:
+    """q: [b, nq, H, dh]; k, v: [b, nk, Hkv, dh]; mask [b|1, 1, nq, nk]."""
+    b, nq, H, dh = q.shape
+    Hkv = k.shape[2]
+    rep = H // Hkv
+    kr = jnp.repeat(k, rep, axis=2) if rep > 1 else k
+    vr = jnp.repeat(v, rep, axis=2) if rep > 1 else v
+    scale = dh ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kr,
+                        preferred_element_type=jnp.float32) * scale
+    if softmax:
+        scores = jnp.where(mask > 0, scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1)
+    else:
+        w = sigma_attn_weights(scores, mask)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w.astype(v.dtype), vr)
+    return out.reshape(b, nq, H * dh)
+
+
+def constrain_qkv(cfg: ArchConfig, q, k, v):
+    """Head-shard Q/K/V on the model axis when the head count divides it;
+    otherwise fall back to *query-sequence* sharding on the model axis
+    (context parallelism) — head sharding with non-divisible counts silently
+    replicates the whole attention computation (§Perf iteration 3)."""
+    from repro.distributed.context import get_ctx
+
+    ctx = get_ctx()
+    M = ctx.mesh.shape.get("model", 1) if ctx else 1
+    if cfg.n_heads % max(M, 1) == 0:
+        q = constrain(q, "batch", None, "model", None)
+        k = constrain(k, "batch", None, "model", None)
+        v = constrain(v, "batch", None, "model", None)
+    else:
+        q = constrain(q, "batch", "seq_model", None, None)
+        k = constrain(k, "batch", None, None, None)
+        v = constrain(v, "batch", None, None, None)
+    return q, k, v
+
+
+def attn_apply(
+    params: dict,
+    cfg: ArchConfig,
+    layer: LayerCfg,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    train: bool = False,
+    vq_rng: Optional[jax.Array] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Full (train / prefill) attention. Returns (out [b,n,d], vq_aux_loss)."""
+    b, n, _ = x.shape
+    q, k, v = _qkv(params, cfg, x)
+    if cfg.pos == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q, k, v = constrain_qkv(cfg, q, k, v)
+    o = full_attention(q, k, v, causal=True, window=layer.window, softmax=cfg.attn_softmax)
+    o = constrain(o, "batch", None, "model")
+    aux = jnp.zeros((), jnp.float32)
+    if "vq" in params:
+        if train:
+            o, _, aux = vq_mod.forward_train(params["vq"], o, cfg.vqt, rng=vq_rng)
+        else:
+            o, _ = vq_mod.quantize(params["vq"], o)
+    o = o @ params["wo"]
+    if "bo" in params:
+        o = o + params["bo"]
+    return o, aux
+
+
+def attn_decode_core(
+    cfg: ArchConfig,
+    layer: LayerCfg,
+    q: jax.Array,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    cache: dict,
+) -> tuple[jax.Array, dict]:
+    """Cache update + attention for one decode token (shared by GQA & Hymba).
+
+    q: [b,1,H,dh]; k_new/v_new: [b,1,Hkv,dh].
+    cache: {"k": [b, S, Hkv, dh], "v": [b, S, Hkv, dh], "len": [b] int32}.
+    For windowed layers S == window and writes wrap (ring buffer).
+    Returns (out [b, 1, H*dh], new_cache).
+    """
+    S = cache["k"].shape[1]
+    cache_len = cache["len"]  # [b]
+    if layer.window is not None:
+        slot = cache_len % S  # ring buffer
+    else:
+        slot = jnp.minimum(cache_len, S - 1)
+    k = jax.vmap(lambda c, kn, s: jax.lax.dynamic_update_slice(c, kn, (s, 0, 0)))(
+        cache["k"], k_new, slot
+    )
+    v = jax.vmap(lambda c, vn, s: jax.lax.dynamic_update_slice(c, vn, (s, 0, 0)))(
+        cache["v"], v_new, slot
+    )
+    k = constrain(k, "batch", "seq", "model", None)
+    v = constrain(v, "batch", "seq", "model", None)
+    # Validity: slot j holds a real token if j < len+1 (ring: all valid when
+    # len+1 >= S).
+    ki = jnp.arange(S)[None, :]
+    valid = ki < jnp.minimum(cache_len + 1, S)[:, None]
+    mask = valid[:, None, None, :].astype(jnp.float32)
+    o = attention_core(q, k, v, mask, softmax=cfg.attn_softmax)
+    return o, {"k": k, "v": v, "len": cache_len + 1}
+
+
+def attn_decode(
+    params: dict,
+    cfg: ArchConfig,
+    layer: LayerCfg,
+    x: jax.Array,
+    cache: dict,
+    positions: jax.Array,
+) -> tuple[jax.Array, dict]:
+    """One-token decode step against a KV cache."""
+    b, n, _ = x.shape
+    assert n == 1, "decode step processes one new token"
+    q, k_new, v_new = _qkv(params, cfg, x)
+    if cfg.pos == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k_new = apply_rope(k_new, positions, cfg.rope_theta)
+    o, new_cache = attn_decode_core(cfg, layer, q, k_new, v_new, cache)
+    if "vq" in params:
+        o, _ = vq_mod.quantize(params["vq"], o)
+    o = o @ params["wo"]
+    if "bo" in params:
+        o = o + params["bo"]
+    return o, new_cache
+
+
+def attn_cache_init(cfg: ArchConfig, layer: LayerCfg, batch: int, seq_len: int,
+                    dtype=jnp.bfloat16) -> dict:
+    S = min(layer.window, seq_len) if layer.window is not None else seq_len
+    Hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, S, Hkv, dh), dtype),
+        "v": jnp.zeros((batch, S, Hkv, dh), dtype),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }

@@ -1,0 +1,52 @@
+"""Token / positional embeddings, including the paper's sampled positions."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+def embedding_init(key: jax.Array, cfg: ArchConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {"tok": (jax.random.normal(ks[0], (cfg.vocab, cfg.d_model)) * 0.02).astype(dtype)}
+    if cfg.n_codebooks > 1:  # musicgen: one embedding per EnCodec codebook
+        p["tok"] = (
+            jax.random.normal(ks[0], (cfg.n_codebooks, cfg.vocab, cfg.d_model)) * 0.02
+        ).astype(dtype)
+    if cfg.pos == "learned":
+        p["pos"] = (jax.random.normal(ks[1], (cfg.max_seq, cfg.d_model)) * 0.02).astype(dtype)
+    elif cfg.pos == "sampled":
+        pool = cfg.pos_pool if cfg.pos_pool else cfg.max_seq * 100
+        p["pos"] = (jax.random.normal(ks[1], (pool, cfg.d_model)) * 0.02).astype(dtype)
+    if cfg.input_mode == "vlm":
+        # projector from (stub) vision embeddings to d_model
+        p["vis_proj"] = (
+            jax.random.normal(ks[2], (cfg.d_model, cfg.d_model)) * cfg.d_model ** -0.5
+        ).astype(dtype)
+    return p
+
+
+def embed_tokens(params: dict, cfg: ArchConfig, tokens: jax.Array,
+                 positions: jax.Array | None = None) -> jax.Array:
+    """tokens: [b, n] (or [b, n, n_codebooks] for audio). positions: [b, n]
+    absolute ids (required for 'learned'/'sampled')."""
+    if cfg.n_codebooks > 1:
+        assert tokens.ndim == 3, "audio tokens must be [b, n, n_codebooks]"
+        # params['tok']: [cb, vocab, d]; tokens: [b, n, cb]
+        x = sum(
+            jnp.take(params["tok"][c], tokens[..., c], axis=0)
+            for c in range(cfg.n_codebooks)
+        )
+    else:
+        x = jnp.take(params["tok"], tokens, axis=0)
+    if cfg.pos in ("learned", "sampled"):
+        assert positions is not None, f"pos={cfg.pos} needs explicit position ids"
+        x = x + jnp.take(params["pos"], positions, axis=0)
+    return x
+
+
+def merge_vision(params: dict, patch_embeds: jax.Array, x: jax.Array) -> jax.Array:
+    """Prefix (stub) vision patch embeddings to the token stream (VLM)."""
+    vis = patch_embeds @ params["vis_proj"]
+    return jnp.concatenate([vis.astype(x.dtype), x], axis=1)

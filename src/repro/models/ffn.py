@@ -1,0 +1,47 @@
+"""Dense feed-forward variants."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _dense_init(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def ffn_init(key: jax.Array, kind: str, d: int, d_ff: int, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": _dense_init(ks[0], d, d_ff, dtype),
+            "w_up": _dense_init(ks[1], d, d_ff, dtype),
+            "w_down": _dense_init(ks[2], d_ff, d, dtype),
+        }
+    if kind in ("gelu", "relu", "relu2"):
+        return {
+            "w_up": _dense_init(ks[0], d, d_ff, dtype),
+            "b_up": jnp.zeros((d_ff,), dtype),
+            "w_down": _dense_init(ks[1], d_ff, d, dtype),
+            "b_down": jnp.zeros((d,), dtype),
+        }
+    raise ValueError(kind)
+
+
+def ffn_apply(kind: str, params: dict, x: jax.Array) -> jax.Array:
+    if kind == "swiglu":
+        g = jax.nn.silu(x @ params["w_gate"])
+        return (g * (x @ params["w_up"])) @ params["w_down"]
+    if kind == "geglu":
+        g = jax.nn.gelu(x @ params["w_gate"], approximate=True)
+        return (g * (x @ params["w_up"])) @ params["w_down"]
+    if kind in ("gelu", "relu", "relu2"):
+        h = x @ params["w_up"] + params["b_up"]
+        if kind == "gelu":
+            h = jax.nn.gelu(h, approximate=True)
+        elif kind == "relu":
+            h = jax.nn.relu(h)
+        else:
+            h = jax.nn.relu(h) ** 2
+        return h @ params["w_down"] + params["b_down"]
+    raise ValueError(kind)

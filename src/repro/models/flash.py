@@ -1,0 +1,185 @@
+"""Streaming (flash-style) attention in pure JAX — lax.scan over KV blocks.
+
+Two accumulation modes:
+
+* ``softmax=True`` — online-softmax (running max + denominator), the standard
+  flash recurrence;
+* ``softmax=False`` — the paper's element-wise σ attention (eq. 1). Because σ
+  is applied per score entry, every KV block contributes an *independent*
+  partial sum: no running max, no accumulator rescaling. This is the
+  TPU-friendly property DESIGN.md §3 records as a beyond-paper win (the
+  Pallas kernel ``repro.kernels.gated_attention`` is the MXU version of this
+  loop).
+
+Each block body is wrapped in ``jax.checkpoint`` so the backward pass
+recomputes block scores instead of storing [b, H, n_q, n_k] — this is what
+makes the 4k-train and 32k-prefill shapes fit in HBM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+# §Perf iteration toggle: when False, every q block scans ALL kv blocks
+# (the paper-faithful / pre-optimization baseline for the roofline A/B).
+SKIP_MASKED_BLOCKS = True
+
+
+def _block_mask(
+    q_idx: jax.Array,  # [nq] absolute query order indices
+    k_start: int | jax.Array,
+    kv_block: int,
+    n_k: int,
+    *,
+    causal: bool,
+    window: Optional[int],
+) -> jax.Array:
+    """{0,1} mask [nq, kv_block] for one KV block starting at ``k_start``."""
+    ki = k_start + jnp.arange(kv_block)
+    m = (ki < n_k)[None, :]
+    if causal:
+        m = m & (ki[None, :] <= q_idx[:, None])
+    if window is not None:
+        m = m & (ki[None, :] > (q_idx[:, None] - window))
+    return m
+
+
+def streaming_attention(
+    q: jax.Array,  # [b, nq, H, dqk]
+    k: jax.Array,  # [b, nk, Hkv, dqk]
+    v: jax.Array,  # [b, nk, Hkv, dv]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    softmax: bool = True,
+    kv_block: int = 1024,
+    q_block: int = 1024,
+    remat: bool = True,
+) -> jax.Array:
+    """Returns [b, nq, H*dv] (f32 accumulation, cast to v.dtype).
+
+    Queries are processed in static blocks and each q block scans only the
+    KV blocks its causal/sliding-window mask can reach (§Perf iteration 2):
+    fully-masked (q, kv) block pairs are skipped at *trace* time, so the
+    causal lower triangle costs ~half and a window w touches only
+    ~(w + q_block)/kv_block blocks per q block.
+    """
+    b, nq_all, H, dqk = q.shape
+    # bound the static unroll: <=16 kv blocks per q block, <=8 q blocks
+    kv_block = max(kv_block, -(-k.shape[1] // 16))
+    q_block = max(q_block, -(-nq_all // 8))
+    if nq_all > q_block:
+        outs = []
+        for qs in range(0, nq_all, q_block):
+            qe = min(qs + q_block, nq_all)
+            outs.append(
+                streaming_attention(
+                    q[:, qs:qe], k, v, causal=causal, window=window,
+                    q_offset=q_offset + qs, softmax=softmax,
+                    kv_block=kv_block, q_block=q_block, remat=remat,
+                )
+            )
+        return jnp.concatenate(outs, axis=1)
+
+    nq = nq_all
+    nk = k.shape[1]
+    Hkv = k.shape[2]
+    dv = v.shape[-1]
+    rep = H // Hkv
+    scale = dqk ** -0.5
+    q_idx = q_offset + jnp.arange(nq)
+
+    kv_block = min(kv_block, nk)
+    pad = (-nk) % kv_block
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nblk_all = (nk + pad) // kv_block
+    # static reachability: this q block sees keys in (q_offset - window, q_offset + nq)
+    lo_blk = 0
+    hi_blk = nblk_all
+    if SKIP_MASKED_BLOCKS:
+        if window is not None:
+            lo_blk = max(0, (q_offset - window + 1) // kv_block)
+        if causal:
+            hi_blk = min(nblk_all, (q_offset + nq - 1) // kv_block + 1)
+    nblk = max(hi_blk - lo_blk, 1)
+    kb = k.reshape(b, nblk_all, kv_block, Hkv, dqk)[:, lo_blk:lo_blk + nblk]
+    vb = v.reshape(b, nblk_all, kv_block, Hkv, dv)[:, lo_blk:lo_blk + nblk]
+
+    # dots take bf16 operands with f32 accumulation (MXU-native); casting
+    # inputs to f32 first doubles the score-tensor traffic for nothing
+    # (§Perf iteration 1 — measured in EXPERIMENTS.md).
+    def block_scores(k_blk, blk_i):
+        kr = jnp.repeat(k_blk, rep, axis=2) if rep > 1 else k_blk  # [b,blk,H,dqk]
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kr,
+                       preferred_element_type=jnp.float32) * scale
+        mask = _block_mask(q_idx, blk_i * kv_block, kv_block, nk,
+                           causal=causal, window=window)
+        return s, mask
+
+    # NOTE: the KV loop is a *Python* loop (statically unrolled), not a
+    # lax.scan: (i) on TPU this loop is the Pallas grid; (ii) XLA cost
+    # analysis counts a scan body once regardless of trip count, which would
+    # hide the attention cost from the §Roofline terms (verified); (iii) the
+    # block counts are bounded by the adaptive block sizes chosen in
+    # full_attention. Each block body is checkpointed so backward recomputes
+    # its scores instead of storing them.
+    if softmax:
+
+        def body(carry, k_blk, v_blk, blk_i):
+            o, m_run, l_run = carry
+            s, mask = block_scores(k_blk, blk_i)
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, s.max(-1))
+            alpha = jnp.exp(m_run - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            vr = jnp.repeat(v_blk, rep, axis=2) if rep > 1 else v_blk
+            # PV in input precision with f32 accumulation (flash-standard)
+            o = o * alpha[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(vr.dtype), vr,
+                preferred_element_type=jnp.float32,
+            )
+            l_run = l_run * alpha + p.sum(-1)
+            return o, m_new, l_run
+
+        carry = (
+            jnp.zeros((b, H, nq, dv), jnp.float32),
+            jnp.full((b, H, nq), NEG_INF, jnp.float32),
+            jnp.zeros((b, H, nq), jnp.float32),
+        )
+        fn = jax.checkpoint(body) if remat else body
+        for j in range(nblk):
+            carry = fn(carry, kb[:, j], vb[:, j], lo_blk + j)
+        o, _, l = carry
+        o = o / jnp.maximum(l[..., None], 1e-9)
+    else:
+        # σ attention: independent partial sums — no rescaling pass at all.
+        def body(carry, k_blk, v_blk, blk_i):
+            o, cnt = carry
+            s, mask = block_scores(k_blk, blk_i)
+            w = jax.nn.gelu(s, approximate=True) * mask[None, None]
+            vr = jnp.repeat(v_blk, rep, axis=2) if rep > 1 else v_blk
+            o = o + jnp.einsum("bhqk,bkhd->bhqd", w.astype(vr.dtype), vr,
+                               preferred_element_type=jnp.float32)
+            cnt = cnt + mask.sum(-1).astype(jnp.float32)
+            return o, cnt
+
+        carry = (
+            jnp.zeros((b, H, nq, dv), jnp.float32),
+            jnp.zeros((nq,), jnp.float32),
+        )
+        fn = jax.checkpoint(body) if remat else body
+        for j in range(nblk):
+            carry = fn(carry, kb[:, j], vb[:, j], lo_blk + j)
+        o, cnt = carry
+        o = o / jnp.maximum(cnt, 1.0)[None, None, :, None]
+
+    out = jnp.moveaxis(o, 1, 2).reshape(b, nq, H * dv)
+    return out.astype(v.dtype)

@@ -1,0 +1,208 @@
+"""Hymba hybrid-head mixer (arXiv:2411.13676).
+
+Each Hymba block runs *parallel* attention heads and Mamba-2 (SSD) heads over
+the same input and fuses their (independently normalized) outputs:
+
+    out = W_o ( mean( norm(attn(x)), norm(ssm(x)) ) )
+
+The attention branch is standard GQA (optionally sliding-window); the SSM
+branch is a Mamba-2 style selective recurrence with a scalar-per-head decay,
+evaluated with the shared chunked linear-recurrence core
+(``repro.models.linear_scan`` with ``mamba_style=True``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerCfg
+from repro.core import vq as vq_mod
+from repro.distributed.context import constrain
+from repro.models.attention import apply_rope, attn_cache_init, full_attention
+from repro.models.norms import rmsnorm, rmsnorm_init
+
+
+def hymba_init(key: jax.Array, cfg: ArchConfig, layer: LayerCfg, dtype=jnp.float32) -> dict:
+    d, H, Hkv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    dh = cfg.resolved_head_dim
+    s = cfg.ssm
+    d_inner = H * dh  # ssm branch width matches the attention branch
+    ks = jax.random.split(key, 12)
+    sc = d ** -0.5
+    p = {
+        # attention branch
+        "wq": (jax.random.normal(ks[0], (d, H * dh)) * sc).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, Hkv * dh)) * sc).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, Hkv * dh)) * sc).astype(dtype),
+        # ssm branch (mamba2-lite): input/gate proj, conv, B/C/dt projections
+        "w_xz": (jax.random.normal(ks[3], (d, 2 * d_inner)) * sc).astype(dtype),
+        "conv_w": (jax.random.normal(ks[4], (s.d_conv, d_inner)) * 0.3).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "w_B": (jax.random.normal(ks[5], (d, s.d_state)) * sc).astype(dtype),
+        "w_C": (jax.random.normal(ks[6], (d, s.d_state)) * sc).astype(dtype),
+        "w_dt": (jax.random.normal(ks[7], (d, H)) * sc).astype(dtype),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32) / 4.0 + 0.5),
+        # per-branch output norms + fusion
+        "norm_attn": rmsnorm_init(H * dh, dtype),
+        "norm_ssm": rmsnorm_init(d_inner, dtype),
+        "wo": (jax.random.normal(ks[8], (H * dh, d)) * (H * dh) ** -0.5).astype(dtype),
+    }
+    if cfg.vqt is not None:
+        p["vq"] = vq_mod.init(ks[9], H * dh, cfg.vqt, dtype=jnp.float32)
+    return p
+
+
+def _ssm_qkv(params: dict, cfg: ArchConfig, xc: jax.Array, x_raw: jax.Array):
+    """From the conv'd ssm stream ``xc`` [b,n,d_inner] and the raw block input
+    ``x_raw`` [b,n,d], build the linear-recurrence operands."""
+    H = cfg.n_heads
+    b, n, d_inner = xc.shape
+    dh = d_inner // H
+    ds = cfg.ssm.d_state
+    Bm = x_raw @ params["w_B"]  # [b, n, ds] shared across heads
+    Cm = x_raw @ params["w_C"]  # [b, n, ds]
+    dt = jax.nn.softplus(
+        x_raw.astype(jnp.float32) @ params["w_dt"].astype(jnp.float32)
+        + params["dt_bias"]
+    )  # [b, n, H]
+    A = jnp.exp(params["A_log"])  # [H] positive
+    logw = -(dt * A[None, None, :])  # [b, n, H] log decay (scalar per head)
+    # -> [b, h, n, *]
+    q = jnp.broadcast_to(Cm[:, None], (b, H, n, ds))
+    k = jnp.broadcast_to(Bm[:, None], (b, H, n, ds)) * jnp.moveaxis(dt, -1, 1)[..., None]
+    v = jnp.moveaxis(xc.reshape(b, n, H, dh), 2, 1)  # [b, H, n, dh]
+    logw_b = jnp.broadcast_to(jnp.moveaxis(logw, -1, 1)[..., None], (b, H, n, ds))
+    return q, k, v, logw_b
+
+
+def _causal_conv(params: dict, xc: jax.Array, conv_state: Optional[jax.Array] = None):
+    """Depthwise causal conv over time. xc: [b, n, d_inner]. conv_state:
+    [b, d_conv-1, d_inner] trailing inputs from the previous call (decode)."""
+    w = params["conv_w"]  # [d_conv, d_inner]
+    K = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xc.shape[0], K - 1, xc.shape[2]), xc.dtype)
+    else:
+        pad = conv_state.astype(xc.dtype)
+    xp = jnp.concatenate([pad, xc], axis=1)  # [b, n+K-1, d_inner]
+    out = sum(xp[:, i : i + xc.shape[1], :] * w[i][None, None, :] for i in range(K))
+    new_state = xp[:, -(K - 1) :, :] if K > 1 else jnp.zeros_like(pad)
+    return jax.nn.silu(out + params["conv_b"]), new_state
+
+
+def hymba_apply(
+    params: dict,
+    cfg: ArchConfig,
+    layer: LayerCfg,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    train: bool = False,
+    vq_rng: Optional[jax.Array] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Full (train / prefill) hybrid mixer. Returns (out [b,n,d], vq_aux)."""
+    from repro.models.linear_scan import lin_attn_chunked
+
+    b, n, _ = x.shape
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    # --- attention branch ---
+    q = (x @ params["wq"]).reshape(b, n, H, dh)
+    k = (x @ params["wk"]).reshape(b, n, Hkv, dh)
+    v = (x @ params["wv"]).reshape(b, n, Hkv, dh)
+    if cfg.pos == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    from repro.models.attention import constrain_qkv
+
+    q, k, v = constrain_qkv(cfg, q, k, v)
+    attn_out = full_attention(
+        q, k, v, causal=True, window=layer.window, softmax=cfg.attn_softmax
+    )  # [b,n,H*dh]
+    attn_out = constrain(attn_out, "batch", None, "model")
+    # --- ssm branch ---
+    xz = x @ params["w_xz"]
+    xs, z = jnp.split(xz, 2, axis=-1)  # each [b, n, d_inner]
+    xc, _ = _causal_conv(params, xs)
+    qs, ks, vs, logw = _ssm_qkv(params, cfg, xc, x)
+    pad_to = -n % 16
+    if pad_to:
+        padf = lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, pad_to), (0, 0)))
+        qs, ks, vs, logw = padf(qs), padf(ks), padf(vs), padf(logw)
+    y, _ = lin_attn_chunked(qs, ks, vs, logw, mamba_style=True)
+    y = y[:, :, :n]  # [b, H, n, dh]
+    ssm_out = jnp.moveaxis(y, 1, 2).reshape(b, n, H * dh).astype(x.dtype)
+    ssm_out = ssm_out * jax.nn.silu(z)
+    # --- fuse ---
+    fused = 0.5 * (
+        rmsnorm(params["norm_attn"], attn_out) + rmsnorm(params["norm_ssm"], ssm_out)
+    )
+    aux = jnp.zeros((), jnp.float32)
+    if "vq" in params:
+        if train:
+            fused, _, aux = vq_mod.forward_train(params["vq"], fused, cfg.vqt, rng=vq_rng)
+        else:
+            fused, _ = vq_mod.quantize(params["vq"], fused)
+    return fused @ params["wo"], aux
+
+
+def hymba_decode(
+    params: dict,
+    cfg: ArchConfig,
+    layer: LayerCfg,
+    x: jax.Array,
+    cache: dict,
+    positions: jax.Array,
+) -> tuple[jax.Array, dict]:
+    """One-token decode. cache: {"attn": attn-kv-cache, "ssm_state":
+    [b,H,ds,dh], "conv_state": [b,d_conv-1,d_inner]}."""
+    from repro.models.attention import attn_decode_core
+    from repro.models.linear_scan import lin_attn_decode_step
+
+    b, n, _ = x.shape
+    assert n == 1
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    # attention branch against kv cache
+    q = (x @ params["wq"]).reshape(b, 1, H, dh)
+    k_new = (x @ params["wk"]).reshape(b, 1, Hkv, dh)
+    v_new = (x @ params["wv"]).reshape(b, 1, Hkv, dh)
+    if cfg.pos == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k_new = apply_rope(k_new, positions, cfg.rope_theta)
+    attn_out, attn_cache = attn_decode_core(
+        cfg, layer, q, k_new, v_new, cache["attn"]
+    )
+    # ssm branch: single-step conv + recurrence
+    xz = x @ params["w_xz"]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = _causal_conv(params, xs, conv_state=cache["conv_state"])
+    qs, ks, vs, logw = _ssm_qkv(params, cfg, xc, x)
+    y, S = lin_attn_decode_step(
+        qs[:, :, 0], ks[:, :, 0], vs[:, :, 0], logw[:, :, 0],
+        cache["ssm_state"], mamba_style=True,
+    )
+    ssm_out = y.reshape(b, 1, H * dh).astype(x.dtype) * jax.nn.silu(z)
+    fused = 0.5 * (
+        rmsnorm(params["norm_attn"], attn_out) + rmsnorm(params["norm_ssm"], ssm_out)
+    )
+    if "vq" in params:
+        fused, _ = vq_mod.quantize(params["vq"], fused)
+    return fused @ params["wo"], {
+        "attn": attn_cache,
+        "ssm_state": S,
+        "conv_state": conv_state,
+    }
+
+
+def hymba_cache_init(cfg: ArchConfig, layer: LayerCfg, batch: int, seq_len: int,
+                     dtype=jnp.bfloat16) -> dict:
+    H, dh = cfg.n_heads, cfg.resolved_head_dim
+    s = cfg.ssm
+    d_inner = H * dh
+    return {
+        "attn": attn_cache_init(cfg, layer, batch, seq_len, dtype),
+        "ssm_state": jnp.zeros((batch, H, s.d_state, dh), jnp.float32),
+        "conv_state": jnp.zeros((batch, s.d_conv - 1, d_inner), dtype),
+    }

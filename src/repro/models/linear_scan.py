@@ -1,0 +1,159 @@
+"""Shared linear-recurrence core for SSM-family mixers (Mamba2 SSD, RWKV6).
+
+Recurrence (per batch & head, state S ∈ R^{dk×dv}):
+
+    S_t = diag(λ_t) S_{t-1} + k_t v_tᵀ
+    y_t = (q_t ⊙ d_t) · S_{t-1} + (q_t ⊙ u ⊙ k_t) · v_t
+
+with per-channel decay λ_t = exp(logw_t) ∈ (0, 1]. Setting d_t = 1 and a
+learned bonus u gives RWKV6's WKV (Finch, arXiv:2404.05892); setting
+d_t = λ_t and u = 1 gives Mamba-2's SSD with scalar-per-head decay broadcast
+over dk (arXiv:2405.21060 as used by Hymba).
+
+Two implementations:
+* ``sequential`` — lax.scan over time. The oracle; O(n) tiny outer products
+  (VPU-bound on TPU, used for tests and decode states).
+* ``chunked`` — the TPU-native form: O(n/L) chunks of dense matmuls (MXU),
+  with in-chunk decays materialized via cumulative log-sums. Per-step log
+  decay is clamped to >= ``MIN_LOGW`` so the inverse in-chunk decay
+  exp(-W) stays inside f32 range (chunk 16 × 5 = e^80 < f32 max). Decays
+  below e^-5 per step are numerically indistinguishable from 0 after a few
+  steps, so the clamp is lossless in practice (see DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+MIN_LOGW = -5.0
+CHUNK = 16
+
+
+def _prep(q, k, v, logw, u, mamba_style):
+    # shapes: q,k,logw [b,h,n,dk]; v [b,h,n,dv]; u None or [h,dk]
+    logw = jnp.clip(logw.astype(jnp.float32), MIN_LOGW, 0.0)
+    lam = jnp.exp(logw)
+    d = lam if mamba_style else jnp.ones_like(lam)
+    if u is None:
+        u_eff = jnp.ones((q.shape[1], q.shape[-1]), jnp.float32)
+    else:
+        u_eff = u.astype(jnp.float32)
+    return q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32), logw, lam, d, u_eff
+
+
+def lin_attn_sequential(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    logw: jax.Array,
+    u: Optional[jax.Array] = None,
+    s0: Optional[jax.Array] = None,
+    *,
+    mamba_style: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y [b,h,n,dv], s_final [b,h,dk,dv])."""
+    q, k, v, logw, lam, d, u_eff = _prep(q, k, v, logw, u, mamba_style)
+    b, h, n, dk = q.shape
+    dv = v.shape[-1]
+    if s0 is None:
+        s0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+
+    def step(S, inp):
+        qt, kt, vt, lt, dt = inp  # [b,h,dk] etc.
+        y = jnp.einsum("bhk,bhkv->bhv", qt * dt, S) + jnp.einsum(
+            "bhk,bhv->bhv", qt * u_eff[None] * kt, vt
+        )
+        S = lt[..., None] * S + kt[..., None] * vt[..., None, :]
+        return S, y
+
+    xs = tuple(jnp.moveaxis(a, 2, 0) for a in (q, k, v, lam, d))
+    s_fin, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 2), s_fin
+
+
+def lin_attn_chunked(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    logw: jax.Array,
+    u: Optional[jax.Array] = None,
+    s0: Optional[jax.Array] = None,
+    *,
+    mamba_style: bool = False,
+    chunk: int = CHUNK,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked (matmul-form) evaluation. Same contract as sequential."""
+    q, k, v, logw, lam, d, u_eff = _prep(q, k, v, logw, u, mamba_style)
+    b, h, n, dk = q.shape
+    dv = v.shape[-1]
+    L = chunk
+    assert n % L == 0, f"seq {n} must be a multiple of chunk {L} (pad upstream)"
+    C = n // L
+    if s0 is None:
+        s0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+
+    # reshape to chunks: [b,h,C,L,*]
+    rc = lambda a: a.reshape(b, h, C, L, a.shape[-1])
+    qc, kc, vc, lwc, dc = map(rc, (q, k, v, logw, d))
+    W = jnp.cumsum(lwc, axis=3)  # inclusive in-chunk cumulative log decay
+    Wtot = W[:, :, :, -1:, :]  # [b,h,C,1,dk]
+    # decayed views
+    q_in = qc * dc * jnp.exp(W - lwc)  # q_t ⊙ d_t ⊙ P_{t-1}/P_{c0}  (P rel. chunk start)
+    k_out = kc * jnp.exp(-W)  # k_s ⊙ P_{c0}/P_s
+    k_carry = kc * jnp.exp(Wtot - W)  # k_s ⊙ P_end/P_s
+
+    # intra-chunk attention (strictly lower-triangular) + u-diagonal
+    A = jnp.einsum("bhcld,bhcmd->bhclm", q_in, k_out)  # l=query, m=key
+    tri = jnp.tril(jnp.ones((L, L), jnp.float32), k=-1)
+    A = A * tri
+    diag = jnp.einsum("bhcld,bhcld->bhcl", qc * u_eff[None, :, None, None, :], kc)
+    y_intra = jnp.einsum("bhclm,bhcmv->bhclv", A, vc) + diag[..., None] * vc
+
+    # inter-chunk: scan carry over chunk states. The per-chunk state delta
+    # (an outer product [dk, dv]) is formed *inside* the scan body so we never
+    # materialize the full [b,h,C,dk,dv] tensor.
+    lam_tot = jnp.exp(Wtot[:, :, :, 0, :])  # [b,h,C,dk]
+
+    def carry_fn(S, inp):
+        lam_c, kcar_c, v_c, q_c = inp  # [b,h,dk], [b,h,L,dk], [b,h,L,dv], [b,h,L,dk]
+        y_cross = jnp.einsum("bhld,bhdv->bhlv", q_c, S)
+        dS_c = jnp.einsum("bhld,bhlv->bhdv", kcar_c, v_c)
+        S_next = lam_c[..., None] * S + dS_c
+        return S_next, y_cross
+
+    xs = (
+        jnp.moveaxis(lam_tot, 2, 0),
+        jnp.moveaxis(k_carry, 2, 0),
+        jnp.moveaxis(vc, 2, 0),
+        jnp.moveaxis(q_in, 2, 0),
+    )
+    s_fin, y_cross = jax.lax.scan(carry_fn, s0, xs)
+    y = y_intra + jnp.moveaxis(y_cross, 0, 2)
+    return y.reshape(b, h, n, dv), s_fin
+
+
+def lin_attn_decode_step(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    logw: jax.Array,
+    S: jax.Array,
+    u: Optional[jax.Array] = None,
+    *,
+    mamba_style: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Single-token state update. q,k,logw: [b,h,dk]; v: [b,h,dv];
+    S: [b,h,dk,dv]. Returns (y [b,h,dv], S')."""
+    logw = jnp.clip(logw.astype(jnp.float32), MIN_LOGW, 0.0)
+    lam = jnp.exp(logw)
+    d = lam if mamba_style else jnp.ones_like(lam)
+    if u is None:
+        u = jnp.ones((q.shape[1], q.shape[-1]), jnp.float32)
+    qf, kf, vf = (a.astype(jnp.float32) for a in (q, k, v))
+    y = jnp.einsum("bhk,bhkv->bhv", qf * d, S) + jnp.einsum(
+        "bhk,bhv->bhv", qf * u[None] * kf, vf
+    )
+    S = lam[..., None] * S + kf[..., None] * vf[..., None, :]
+    return y, S

@@ -1,0 +1,195 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3, arXiv:2405.04434 §2.1).
+
+Train / prefill uses the *naive* (expanded) form; decode uses the *absorbed*
+form, caching only the compressed latent ``c_kv`` (kv_lora dims) plus the
+shared RoPE key (rope_dim dims) per token — 576 floats/token for V2/V3
+instead of 2*H*dh. This is the memory win that makes 32k decode caches cheap
+and is exactly how the paper's serving deployments run.
+
+Weights:
+  w_dq:  [d, q_lora]         w_uq: [q_lora, H*(nope+rope)]
+  w_dkv: [d, kv_lora+rope]   w_uk: [kv_lora, H*nope]   w_uv: [kv_lora, H*v]
+  wo:    [H*v, d]
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerCfg
+from repro.core import vq as vq_mod
+from repro.distributed.context import constrain
+from repro.models.attention import apply_rope, make_mask, sigma_attn_weights
+from repro.models.norms import rmsnorm, rmsnorm_init
+
+
+def mla_init(key: jax.Array, cfg: ArchConfig, layer: LayerCfg, dtype=jnp.float32) -> dict:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 7)
+    s = d ** -0.5
+    p = {
+        "w_dq": (jax.random.normal(ks[0], (d, m.q_lora)) * s).astype(dtype),
+        "w_uq": (
+            jax.random.normal(ks[1], (m.q_lora, H * (m.nope_dim + m.rope_dim)))
+            * m.q_lora ** -0.5
+        ).astype(dtype),
+        "w_dkv": (jax.random.normal(ks[2], (d, m.kv_lora + m.rope_dim)) * s).astype(dtype),
+        "w_uk": (
+            jax.random.normal(ks[3], (m.kv_lora, H * m.nope_dim)) * m.kv_lora ** -0.5
+        ).astype(dtype),
+        "w_uv": (
+            jax.random.normal(ks[4], (m.kv_lora, H * m.v_dim)) * m.kv_lora ** -0.5
+        ).astype(dtype),
+        "wo": (jax.random.normal(ks[5], (H * m.v_dim, d)) * (H * m.v_dim) ** -0.5).astype(dtype),
+        "q_norm": rmsnorm_init(m.q_lora, dtype),
+        "kv_norm": rmsnorm_init(m.kv_lora, dtype),
+    }
+    if cfg.vqt is not None:
+        p["vq"] = vq_mod.init(ks[6], H * m.v_dim, cfg.vqt, dtype=jnp.float32)
+    return p
+
+
+def _queries(params: dict, cfg: ArchConfig, x: jax.Array, positions: jax.Array):
+    m = cfg.mla
+    b, n, _ = x.shape
+    H = cfg.n_heads
+    cq = rmsnorm(params["q_norm"], x @ params["w_dq"])
+    q = (cq @ params["w_uq"]).reshape(b, n, H, m.nope_dim + m.rope_dim)
+    q_nope, q_rope = q[..., : m.nope_dim], q[..., m.nope_dim :]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latent(params: dict, cfg: ArchConfig, x: jax.Array, positions: jax.Array):
+    m = cfg.mla
+    ckv_full = x @ params["w_dkv"]  # [b, n, kv_lora + rope]
+    c_kv = rmsnorm(params["kv_norm"], ckv_full[..., : m.kv_lora])
+    k_rope = ckv_full[..., None, m.kv_lora :]  # [b, n, 1, rope] shared head
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+    return c_kv, k_rope
+
+
+def mla_apply(
+    params: dict,
+    cfg: ArchConfig,
+    layer: LayerCfg,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    train: bool = False,
+    vq_rng: Optional[jax.Array] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Naive (expanded) MLA for train/prefill."""
+    m = cfg.mla
+    b, n, _ = x.shape
+    H = cfg.n_heads
+    q_nope, q_rope = _queries(params, cfg, x, positions)
+    c_kv, k_rope = _latent(params, cfg, x, positions)
+    k_nope = (c_kv @ params["w_uk"]).reshape(b, n, H, m.nope_dim)
+    v = (c_kv @ params["w_uv"]).reshape(b, n, H, m.v_dim)
+    q_nope = constrain(q_nope, "batch", None, "model", None)
+    k_nope = constrain(k_nope, "batch", None, "model", None)
+    v = constrain(v, "batch", None, "model", None)
+    from repro.models.attention import STREAM_THRESHOLD
+
+    if n > STREAM_THRESHOLD:
+        # streaming path: fold the shared RoPE key into a combined head dim
+        from repro.models.flash import streaming_attention
+
+        q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)  # [b,n,H,nope+rope]
+        k_cat = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (b, n, H, m.rope_dim))], axis=-1
+        )
+        o = streaming_attention(
+            q_cat, k_cat, v, causal=True, window=layer.window,
+            softmax=cfg.attn_softmax,
+        ).reshape(b, n, H * m.v_dim)
+    else:
+        scale = (m.nope_dim + m.rope_dim) ** -0.5
+        scores = (
+            jnp.einsum("bqhd,bkhd->bhqk", q_nope, k_nope,
+                       preferred_element_type=jnp.float32)
+            + jnp.einsum("bqhd,bkxd->bhqk", q_rope, k_rope,
+                         preferred_element_type=jnp.float32)
+        ) * scale
+        mask = make_mask(n, n, causal=True, window=layer.window)
+        if cfg.attn_softmax:
+            w = jax.nn.softmax(jnp.where(mask > 0, scores, -1e30), axis=-1)
+        else:
+            w = sigma_attn_weights(scores, mask)
+        o = jnp.einsum("bhqk,bkhd->bqhd", w.astype(v.dtype), v).reshape(b, n, H * m.v_dim)
+    aux = jnp.zeros((), jnp.float32)
+    if "vq" in params:
+        if train:
+            o, _, aux = vq_mod.forward_train(params["vq"], o, cfg.vqt, rng=vq_rng)
+        else:
+            o, _ = vq_mod.quantize(params["vq"], o)
+    return o @ params["wo"], aux
+
+
+def mla_decode(
+    params: dict,
+    cfg: ArchConfig,
+    layer: LayerCfg,
+    x: jax.Array,
+    cache: dict,
+    positions: jax.Array,
+) -> tuple[jax.Array, dict]:
+    """Absorbed-form decode: attend in the kv_lora latent space.
+
+    cache: {"ckv": [b, S, kv_lora], "krope": [b, S, rope], "len": [b]}.
+    Per new token: q̃ = q_nope @ W_uk (absorb), scores = q̃·c_kv + q_rope·k_rope,
+    o_latent = w·c_kv, o = (o_latent @ W_uv per head) — W_uv application is a
+    per-head matmul done once per step (H*v_dim*kv_lora), not per cached token.
+    """
+    m = cfg.mla
+    b, n, _ = x.shape
+    assert n == 1
+    H = cfg.n_heads
+    q_nope, q_rope = _queries(params, cfg, x, positions)  # [b,1,H,*]
+    c_new, krope_new = _latent(params, cfg, x, positions)  # [b,1,kv], [b,1,1,rope]
+    S = cache["ckv"].shape[1]
+    cache_len = cache["len"]
+    slot = jnp.minimum(cache_len, S - 1)
+    ckv = jax.vmap(lambda c, nw, s: jax.lax.dynamic_update_slice(c, nw, (s, 0)))(
+        cache["ckv"], c_new, slot
+    )
+    krope = jax.vmap(lambda c, nw, s: jax.lax.dynamic_update_slice(c, nw, (s, 0)))(
+        cache["krope"], krope_new[:, :, 0, :], slot
+    )
+    ckv = constrain(ckv, "batch", "seq", None)
+    # Absorb W_uk into the query: q̃ [b,1,H,kv_lora]
+    w_uk = params["w_uk"].reshape(m.kv_lora, H, m.nope_dim)  # [c, h, d]
+    q_lat = jnp.einsum("bqhd,chd->bqhc", q_nope, w_uk)
+    scale = (m.nope_dim + m.rope_dim) ** -0.5
+    scores = (
+        jnp.einsum("bqhc,bkc->bhqk", q_lat, ckv,
+                   preferred_element_type=jnp.float32)
+        + jnp.einsum("bqhd,bkd->bhqk", q_rope[:, :, :, :], krope,
+                     preferred_element_type=jnp.float32)
+    ) * scale
+    ki = jnp.arange(S)[None, :]
+    valid = (ki < jnp.minimum(cache_len + 1, S)[:, None])[:, None, None, :]
+    if cfg.attn_softmax:
+        w = jax.nn.softmax(jnp.where(valid, scores, -1e30), axis=-1)
+    else:
+        w = sigma_attn_weights(scores, valid.astype(jnp.float32))
+    o_lat = jnp.einsum("bhqk,bkc->bqhc", w.astype(ckv.dtype), ckv)  # [b,1,H,kv]
+    w_uv = params["w_uv"].reshape(m.kv_lora, H, m.v_dim)
+    o = jnp.einsum("bqhc,chd->bqhd", o_lat, w_uv).reshape(b, n, H * m.v_dim)
+    if "vq" in params:
+        o, _ = vq_mod.quantize(params["vq"], o)
+    return o @ params["wo"], {"ckv": ckv, "krope": krope, "len": cache_len + 1}
+
+
+def mla_cache_init(cfg: ArchConfig, layer: LayerCfg, batch: int, seq_len: int,
+                   dtype=jnp.bfloat16) -> dict:
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, seq_len, m.kv_lora), dtype),
+        "krope": jnp.zeros((batch, seq_len, m.rope_dim), dtype),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }

@@ -1,0 +1,60 @@
+"""Normalization layers (pure JAX, params = dicts of arrays)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+def layernorm_init(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+def norm_init(kind: str, d: int, dtype=jnp.float32) -> dict:
+    if kind == "rmsnorm":
+        return rmsnorm_init(d, dtype)
+    if kind == "layernorm":
+        return layernorm_init(d, dtype)
+    raise ValueError(kind)
+
+
+def apply_norm(kind: str, params: dict, x: jax.Array) -> jax.Array:
+    if kind == "rmsnorm":
+        return rmsnorm(params, x)
+    if kind == "layernorm":
+        return layernorm(params, x)
+    raise ValueError(kind)
+
+
+def groupnorm(x: jax.Array, n_groups: int, scale: jax.Array, bias: jax.Array,
+              eps: float = 64e-5) -> jax.Array:
+    """GroupNorm over the last dim (used by RWKV6 on per-head outputs)."""
+    dt = x.dtype
+    *lead, d = x.shape
+    xf = x.astype(jnp.float32).reshape(*lead, n_groups, d // n_groups)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = xf.reshape(*lead, d) * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(dt)

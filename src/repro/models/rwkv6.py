@@ -1,0 +1,183 @@
+"""RWKV-6 "Finch" mixer (arXiv:2404.05892): attention-free time-mix with
+data-dependent per-channel decay, plus the RWKV channel-mix FFN.
+
+Time-mix (per head, state S ∈ R^{dk×dv}):
+
+    wkv_t = (r_t) · S_{t-1} + (r_t ⊙ u ⊙ k_t) · v_t
+    S_t   = diag(λ_t) S_{t-1} + k_t v_tᵀ ,   λ_t = exp(-exp(w_t))
+
+where w_t is produced by a low-rank ("decay LoRA") projection of the
+token-shifted input — the data-dependent decay that defines RWKV-6. The
+recurrence is the ``mamba_style=False`` case of the shared linear-scan core.
+
+Token shift: every projection sees lerp(x_t, x_{t-1}, μ); decode carries the
+previous token's input in the cache.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerCfg
+from repro.models.norms import groupnorm
+
+
+def _lora(x, w_a, w_b, activation=jnp.tanh):
+    return activation(x @ w_a) @ w_b
+
+
+def rwkv_init(key: jax.Array, cfg: ArchConfig, layer: LayerCfg, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    r = cfg.rwkv
+    H = d // r.head_dim
+    ks = jax.random.split(key, 12)
+    s = d ** -0.5
+    p = {
+        # token-shift lerp coefficients for r/k/v/w/g streams
+        "mu": (jax.random.uniform(ks[0], (5, d)) * 0.5).astype(dtype),
+        "w_r": (jax.random.normal(ks[1], (d, d)) * s).astype(dtype),
+        "w_k": (jax.random.normal(ks[2], (d, d)) * s).astype(dtype),
+        "w_v": (jax.random.normal(ks[3], (d, d)) * s).astype(dtype),
+        "w_g": (jax.random.normal(ks[4], (d, d)) * s).astype(dtype),
+        # decay: w0 + lora(x_w)
+        "w0": (jnp.zeros((d,)) - 0.6).astype(jnp.float32),
+        "w_dec_a": (jax.random.normal(ks[5], (d, r.decay_lora)) * s).astype(dtype),
+        "w_dec_b": (
+            jax.random.normal(ks[6], (r.decay_lora, d)) * r.decay_lora ** -0.5 * 0.1
+        ).astype(dtype),
+        # per-channel bonus u
+        "u": (jax.random.normal(ks[7], (d,)) * 0.3).astype(jnp.float32),
+        "w_o": (jax.random.normal(ks[8], (d, d)) * s).astype(dtype),
+        "gn_scale": jnp.ones((d,), dtype),
+        "gn_bias": jnp.zeros((d,), dtype),
+    }
+    return p
+
+
+def cm_init(key: jax.Array, cfg: ArchConfig, dtype=jnp.float32) -> dict:
+    """RWKV channel-mix FFN params."""
+    d, d_ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    s = d ** -0.5
+    return {
+        "mu": (jax.random.uniform(ks[0], (2, d)) * 0.5).astype(dtype),
+        "w_k": (jax.random.normal(ks[1], (d, d_ff)) * s).astype(dtype),
+        "w_v": (jax.random.normal(ks[2], (d_ff, d)) * d_ff ** -0.5).astype(dtype),
+        "w_r": (jax.random.normal(ks[0], (d, d)) * s).astype(dtype),
+    }
+
+
+def _token_shift(x: jax.Array, x_last: Optional[jax.Array] = None) -> jax.Array:
+    """x_{t-1} stream: shift right by one along time. x: [b, n, d]."""
+    if x_last is None:
+        pad = jnp.zeros_like(x[:, :1])
+    else:
+        pad = x_last[:, None, :].astype(x.dtype)
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _streams(params: dict, x: jax.Array, x_prev: jax.Array):
+    """Five token-shift-mixed streams r/k/v/w/g: lerp(x, x_prev, mu_i)."""
+    mu = params["mu"]  # [5, d]
+    mix = lambda i: x + (x_prev - x) * mu[i][None, None, :]
+    return mix(0), mix(1), mix(2), mix(3), mix(4)
+
+
+def _time_mix_ops(params: dict, cfg: ArchConfig, x, x_prev):
+    d = cfg.d_model
+    H = d // cfg.rwkv.head_dim
+    dh = cfg.rwkv.head_dim
+    xr, xk, xv, xw, xg = _streams(params, x, x_prev)
+    rr = xr @ params["w_r"]
+    kk = xk @ params["w_k"]
+    vv = xv @ params["w_v"]
+    gg = jax.nn.silu(xg @ params["w_g"])
+    logw = -jnp.exp(
+        params["w0"][None, None, :]
+        + _lora(xw.astype(jnp.float32), params["w_dec_a"].astype(jnp.float32),
+                params["w_dec_b"].astype(jnp.float32))
+    )  # [b, n, d], strictly negative
+    split = lambda a: jnp.moveaxis(a.reshape(*a.shape[:-1], H, dh), -2, 1)
+    u = params["u"].reshape(H, dh)
+    return split(rr), split(kk), split(vv), split(logw), gg, u
+
+
+def rwkv_time_mix(
+    params: dict,
+    cfg: ArchConfig,
+    x: jax.Array,
+    x_last: Optional[jax.Array] = None,
+    s0: Optional[jax.Array] = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Full-sequence time-mix. Returns (out [b,n,d], s_final, x_final)."""
+    from repro.models.linear_scan import lin_attn_chunked
+
+    b, n, d = x.shape
+    H = d // cfg.rwkv.head_dim
+    x_prev = _token_shift(x, x_last)
+    r, k, v, logw, g, u = _time_mix_ops(params, cfg, x, x_prev)
+    pad_to = -n % 16
+    if pad_to:
+        padf = lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, pad_to), (0, 0)))
+        r, k, v, logw = padf(r), padf(k), padf(v), padf(logw)
+    y, s_fin = lin_attn_chunked(r, k, v, logw, u=u, s0=s0, mamba_style=False)
+    y = y[:, :, :n]
+    y = jnp.moveaxis(y, 1, 2).reshape(b, n, d)  # [b, n, d]
+    y = groupnorm(y.astype(x.dtype), H, params["gn_scale"], params["gn_bias"])
+    out = (y * g) @ params["w_o"]
+    return out, s_fin, x[:, -1, :]
+
+
+def rwkv_time_mix_step(
+    params: dict,
+    cfg: ArchConfig,
+    x: jax.Array,
+    state: dict,
+) -> tuple[jax.Array, dict]:
+    """Single-token decode. x: [b, 1, d]; state: {"S": [b,H,dh,dh],
+    "x_last": [b, d]}."""
+    from repro.models.linear_scan import lin_attn_decode_step
+
+    b, n, d = x.shape
+    assert n == 1
+    H = d // cfg.rwkv.head_dim
+    x_prev = _token_shift(x, state["x_last"])
+    r, k, v, logw, g, u = _time_mix_ops(params, cfg, x, x_prev)
+    y, S = lin_attn_decode_step(
+        r[:, :, 0], k[:, :, 0], v[:, :, 0], logw[:, :, 0], state["S"], u=u,
+        mamba_style=False,
+    )
+    y = y.reshape(b, 1, d)
+    y = groupnorm(y.astype(x.dtype), H, params["gn_scale"], params["gn_bias"])
+    out = (y * g) @ params["w_o"]
+    return out, {"S": S, "x_last": x[:, -1, :]}
+
+
+def rwkv_channel_mix(
+    params: dict,
+    x: jax.Array,
+    x_last: Optional[jax.Array] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Channel-mix FFN with token shift. Returns (out, x_final)."""
+    x_prev = _token_shift(x, x_last)
+    mu = params["mu"]
+    xk = x + (x_prev - x) * mu[0][None, None, :]
+    xr = x + (x_prev - x) * mu[1][None, None, :]
+    k = jnp.square(jax.nn.relu(xk @ params["w_k"]))
+    kv = k @ params["w_v"]
+    return jax.nn.sigmoid(xr @ params["w_r"]) * kv, x[:, -1, :]
+
+
+def rwkv_state_init(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    H = d // cfg.rwkv.head_dim
+    dh = cfg.rwkv.head_dim
+    return {
+        "tm": {
+            "S": jnp.zeros((batch, H, dh, dh), jnp.float32),
+            "x_last": jnp.zeros((batch, d), dtype),
+        },
+        "cm_x_last": jnp.zeros((batch, d), dtype),
+    }

@@ -1,0 +1,346 @@
+"""Composable decoder stack.
+
+A model is a sequence of *stages* ``(pattern, repeat)`` (see
+``repro.configs.base``). Parameters for a stage are stacked along a leading
+``repeat`` axis and the stage runs under ``jax.lax.scan`` with the pattern
+body unrolled — bounded HLO size for 48-61-layer models, heterogeneous
+layouts (Gemma-3 5 local:1 global, DeepSeek dense-first-k, Hymba) supported
+through the pattern.
+
+Three entry points:
+  * ``init_params``  — full parameter pytree
+  * ``forward``      — train / prefill forward over [b, n] tokens
+  * ``decode_step``  — one-token decode against per-layer caches
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerCfg
+from repro.distributed.context import constrain
+from repro.models import rwkv6 as rwkv_mod
+from repro.models.attention import attn_apply, attn_cache_init, attn_decode, attn_init
+from repro.models.embedding import embed_tokens, embedding_init, merge_vision
+from repro.models.ffn import ffn_apply, ffn_init
+from repro.models.hymba import hymba_apply, hymba_cache_init, hymba_decode, hymba_init
+from repro.models.mla import mla_apply, mla_cache_init, mla_decode, mla_init
+from repro.models.moe import moe_apply, moe_init
+from repro.models.norms import apply_norm, norm_init
+
+
+# ---------------------------------------------------------------- init
+
+
+def _layer_init(key: jax.Array, cfg: ArchConfig, layer: LayerCfg, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p = {"norm1": norm_init(cfg.norm, d, dtype), "norm2": norm_init(cfg.norm, d, dtype)}
+    if layer.mixer == "gqa":
+        p["mixer"] = attn_init(ks[0], cfg, layer, dtype)
+    elif layer.mixer == "mla":
+        p["mixer"] = mla_init(ks[0], cfg, layer, dtype)
+    elif layer.mixer == "hymba":
+        p["mixer"] = hymba_init(ks[0], cfg, layer, dtype)
+    elif layer.mixer == "rwkv6":
+        p["mixer"] = rwkv_mod.rwkv_init(ks[0], cfg, layer, dtype)
+    else:
+        raise ValueError(layer.mixer)
+    if layer.ffn == "moe":
+        p["ffn"] = moe_init(ks[1], cfg, dtype)
+    elif layer.ffn == "rwkv_cm":
+        p["ffn"] = rwkv_mod.cm_init(ks[1], cfg, dtype)
+    else:
+        p["ffn"] = ffn_init(ks[1], layer.ffn, d, cfg.d_ff, dtype)
+    return p
+
+
+def init_params(key: jax.Array, cfg: ArchConfig, dtype=jnp.float32) -> dict:
+    keys = jax.random.split(key, len(cfg.stages) + 3)
+    params: dict = {"embed": embedding_init(keys[0], cfg, dtype)}
+    stages = []
+    for si, (pattern, repeat) in enumerate(cfg.stages):
+        stage_keys = jax.random.split(keys[si + 1], repeat)
+
+        def one(k, _pattern=pattern):
+            lk = jax.random.split(k, len(_pattern))
+            return tuple(
+                _layer_init(lk[i], cfg, _pattern[i], dtype) for i in range(len(_pattern))
+            )
+
+        stages.append(jax.vmap(one)(stage_keys))
+    params["stages"] = stages
+    params["final_norm"] = norm_init(cfg.norm, cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        v_out = cfg.vocab * max(cfg.n_codebooks, 1)
+        params["lm_head"] = (
+            jax.random.normal(keys[-2], (cfg.d_model, v_out)) * cfg.d_model ** -0.5
+        ).astype(dtype)
+    if cfg.mtp:
+        d = cfg.d_model
+        params["mtp"] = {
+            "norm_h": norm_init(cfg.norm, d, dtype),
+            "norm_e": norm_init(cfg.norm, d, dtype),
+            "proj": (jax.random.normal(keys[-1], (2 * d, d)) * (2 * d) ** -0.5).astype(dtype),
+            "ffn": ffn_init(keys[-1], "swiglu", d, cfg.d_ff, dtype),
+            "norm_f": norm_init(cfg.norm, d, dtype),
+        }
+    return params
+
+
+# ---------------------------------------------------------------- forward
+
+
+def _layer_fwd(
+    lp: dict,
+    cfg: ArchConfig,
+    layer: LayerCfg,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    train: bool,
+    vq_rng: Optional[jax.Array],
+) -> tuple[jax.Array, jax.Array]:
+    """Pre-norm block: x + mixer(n1(x)); then x + ffn(n2(x)). Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(cfg.norm, lp["norm1"], x)
+    if layer.mixer == "gqa":
+        mix, a = attn_apply(lp["mixer"], cfg, layer, h, positions, train=train, vq_rng=vq_rng)
+    elif layer.mixer == "mla":
+        mix, a = mla_apply(lp["mixer"], cfg, layer, h, positions, train=train, vq_rng=vq_rng)
+    elif layer.mixer == "hymba":
+        mix, a = hymba_apply(lp["mixer"], cfg, layer, h, positions, train=train, vq_rng=vq_rng)
+    elif layer.mixer == "rwkv6":
+        mix, _, _ = rwkv_mod.rwkv_time_mix(lp["mixer"], cfg, h)
+        a = jnp.zeros((), jnp.float32)
+    else:
+        raise ValueError(layer.mixer)
+    aux += a
+    x = x + mix
+    h2 = apply_norm(cfg.norm, lp["norm2"], x)
+    if layer.ffn == "moe":
+        y, moe_aux = moe_apply(lp["ffn"], cfg, h2)
+        aux += moe_aux
+    elif layer.ffn == "rwkv_cm":
+        y, _ = rwkv_mod.rwkv_channel_mix(lp["ffn"], h2)
+    else:
+        y = ffn_apply(layer.ffn, lp["ffn"], h2)
+    x = x + y
+    # Megatron-style sequence parallelism: the residual stream lives
+    # sequence-sharded on the model axis between layers, so norms/residual
+    # elementwise work (the dominant byte traffic at 7k d_model) touches
+    # 1/|model| of the tokens; GSPMD inserts the all-gather before QKV and
+    # the reduce-scatter after the output projections (§Perf iteration 5).
+    x = constrain(x, "batch", "seq_model", None)
+    return x, aux
+
+
+def _run_stages(
+    params: dict,
+    cfg: ArchConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    train: bool,
+    rng: Optional[jax.Array],
+    remat: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    aux_total = jnp.zeros((), jnp.float32)
+    base_rng = rng if rng is not None else jax.random.PRNGKey(0)
+    layer_idx = 0
+    for (pattern, repeat), stage_params in zip(cfg.stages, params["stages"]):
+
+        def body(carry, sp, _pattern=pattern):
+            xc, auxc, li = carry
+            for pi, layer in enumerate(_pattern):
+                vq_rng = jax.random.fold_in(base_rng, li * 8 + pi) if train else None
+                xc, a = _layer_fwd(
+                    sp[pi], cfg, layer, xc, positions, train=train, vq_rng=vq_rng
+                )
+                auxc = auxc + a
+            return (xc, auxc, li + len(_pattern)), None
+
+        # activation checkpointing: backward recomputes each layer body from
+        # its carry instead of storing per-layer intermediates. Full remat
+        # (no saveable policy): §Perf iteration 4 A/B-measured
+        # dots_with_no_batch_dims_saveable as WORSE on byte traffic (+14%
+        # on deepseek-v3 train) — recompute beats storing dot outputs here.
+        body_fn = jax.checkpoint(body, prevent_cse=False) if (train and remat) else body
+        if repeat == 1:
+            (x, aux_total, layer_idx), _ = body_fn(
+                (x, aux_total, jnp.asarray(layer_idx)),
+                jax.tree.map(lambda a: a[0], stage_params),
+            )
+        else:
+            (x, aux_total, layer_idx), _ = jax.lax.scan(
+                body_fn, (x, aux_total, jnp.asarray(layer_idx)), stage_params
+            )
+    return x, aux_total
+
+
+def _head(params: dict, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        emb = params["embed"]["tok"]
+        if cfg.n_codebooks > 1:
+            logits = jnp.einsum("bnd,cvd->bncv", x, emb)
+            return logits
+        return x @ emb.T
+    logits = x @ params["lm_head"]
+    logits = constrain(logits, "batch", None, "model")
+    if cfg.n_codebooks > 1:
+        b, n, _ = logits.shape
+        return logits.reshape(b, n, cfg.n_codebooks, cfg.vocab)
+    return logits
+
+
+def forward(
+    params: dict,
+    cfg: ArchConfig,
+    tokens: jax.Array,
+    positions: Optional[jax.Array] = None,
+    *,
+    patch_embeds: Optional[jax.Array] = None,
+    train: bool = False,
+    rng: Optional[jax.Array] = None,
+) -> tuple[jax.Array, dict]:
+    """tokens: [b, n] (audio: [b, n, n_codebooks]). Returns (logits, aux_dict).
+
+    For VLM inputs, ``patch_embeds`` [b, n_patches, d] are projected and
+    prefixed; logits cover the full (patches + text) sequence.
+    """
+    b = tokens.shape[0]
+    n_text = tokens.shape[1]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(n_text, dtype=jnp.int32), (b, n_text))
+    x = embed_tokens(params["embed"], cfg, tokens, positions)
+    if cfg.input_mode == "vlm":
+        assert patch_embeds is not None, "vlm input requires patch_embeds"
+        x = merge_vision(params["embed"], patch_embeds, x)
+        npat = patch_embeds.shape[1]
+        positions = jnp.concatenate(
+            [
+                jnp.broadcast_to(jnp.arange(npat, dtype=jnp.int32), (b, npat)),
+                positions + npat,
+            ],
+            axis=1,
+        )
+    x = constrain(x, "batch", None, None)
+    x, aux = _run_stages(params, cfg, x, positions, train=train, rng=rng)
+    logits = _head(params, cfg, x)
+    out_aux = {"aux_loss": aux, "hidden": x}
+    if cfg.mtp and "mtp" in params:
+        # DeepSeek-V3 style depth-1 multi-token prediction: combine h_t with
+        # the embedding of token t+1 to predict token t+2 with the shared head.
+        m = params["mtp"]
+        emb_next = jnp.roll(embed_tokens(params["embed"], cfg, tokens, positions[:, -n_text:]), -1, axis=1)
+        h_main = x[:, -n_text:]
+        hcat = jnp.concatenate(
+            [
+                apply_norm(cfg.norm, m["norm_h"], h_main),
+                apply_norm(cfg.norm, m["norm_e"], emb_next.astype(x.dtype)),
+            ],
+            axis=-1,
+        )
+        h_mtp = hcat @ m["proj"]
+        h_mtp = h_mtp + ffn_apply("swiglu", m["ffn"], apply_norm(cfg.norm, m["norm_f"], h_mtp))
+        out_aux["mtp_logits"] = _head(params, cfg, h_mtp)
+    return logits, out_aux
+
+
+# ---------------------------------------------------------------- decode
+
+
+def _layer_cache_init(cfg: ArchConfig, layer: LayerCfg, batch: int, seq_len: int, dtype):
+    if layer.mixer == "gqa":
+        c = {"mix": attn_cache_init(cfg, layer, batch, seq_len, dtype)}
+    elif layer.mixer == "mla":
+        c = {"mix": mla_cache_init(cfg, layer, batch, seq_len, dtype)}
+    elif layer.mixer == "hymba":
+        c = {"mix": hymba_cache_init(cfg, layer, batch, seq_len, dtype)}
+    elif layer.mixer == "rwkv6":
+        c = {"mix": rwkv_mod.rwkv_state_init(cfg, batch, dtype)}
+    else:
+        raise ValueError(layer.mixer)
+    return c
+
+
+def init_caches(cfg: ArchConfig, batch: int, seq_len: int, dtype=jnp.bfloat16) -> list:
+    """Per-stage stacked caches mirroring the parameter structure."""
+    caches = []
+    for pattern, repeat in cfg.stages:
+        per_layer = tuple(
+            _layer_cache_init(cfg, layer, batch, seq_len, dtype) for layer in pattern
+        )
+        caches.append(
+            jax.tree.map(lambda a: jnp.zeros((repeat,) + a.shape, a.dtype), per_layer)
+        )
+    return caches
+
+
+def _layer_decode(
+    lp: dict,
+    cfg: ArchConfig,
+    layer: LayerCfg,
+    x: jax.Array,
+    cache: dict,
+    positions: jax.Array,
+) -> tuple[jax.Array, dict]:
+    h = apply_norm(cfg.norm, lp["norm1"], x)
+    if layer.mixer == "gqa":
+        mix, mc = attn_decode(lp["mixer"], cfg, layer, h, cache["mix"], positions)
+    elif layer.mixer == "mla":
+        mix, mc = mla_decode(lp["mixer"], cfg, layer, h, cache["mix"], positions)
+    elif layer.mixer == "hymba":
+        mix, mc = hymba_decode(lp["mixer"], cfg, layer, h, cache["mix"], positions)
+    elif layer.mixer == "rwkv6":
+        mix, tm = rwkv_mod.rwkv_time_mix_step(lp["mixer"], cfg, h, cache["mix"]["tm"])
+        mc = {"tm": tm, "cm_x_last": cache["mix"]["cm_x_last"]}
+    else:
+        raise ValueError(layer.mixer)
+    x = x + mix
+    h2 = apply_norm(cfg.norm, lp["norm2"], x)
+    if layer.ffn == "moe":
+        y, _ = moe_apply(lp["ffn"], cfg, h2)
+    elif layer.ffn == "rwkv_cm":
+        y, cm_last = rwkv_mod.rwkv_channel_mix(lp["ffn"], h2, cache["mix"]["cm_x_last"])
+        mc["cm_x_last"] = cm_last
+    else:
+        y = ffn_apply(layer.ffn, lp["ffn"], h2)
+    return x + y, mc
+
+
+def decode_step(
+    params: dict,
+    cfg: ArchConfig,
+    tokens: jax.Array,
+    caches: list,
+    positions: jax.Array,
+) -> tuple[jax.Array, list]:
+    """One new token per sequence. tokens: [b, 1] (audio [b, 1, cb]).
+    Returns (logits [b, 1, ...], new caches)."""
+    x = embed_tokens(params["embed"], cfg, tokens, positions)
+    x = constrain(x, "batch", None, None)
+    new_caches = []
+    for (pattern, repeat), sp, sc in zip(cfg.stages, params["stages"], caches):
+
+        def body_wrap(xc, inp, _pattern=pattern):
+            spi, sci = inp
+            new_sci = []
+            for pi, layer in enumerate(_pattern):
+                xc, mc = _layer_decode(spi[pi], cfg, layer, xc, sci[pi], positions)
+                new_sci.append({"mix": mc})
+            return xc, tuple(new_sci)
+
+        if repeat == 1:
+            x, nc = body_wrap(
+                x, (jax.tree.map(lambda a: a[0], sp), jax.tree.map(lambda a: a[0], sc))
+            )
+            nc = jax.tree.map(lambda a: a[None], nc)
+        else:
+            x, nc = jax.lax.scan(body_wrap, x, (sp, sc))
+        new_caches.append(nc)
+    logits = _head(params, cfg, x)
+    return logits, new_caches

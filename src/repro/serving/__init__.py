@@ -1,0 +1,2 @@
+from repro.serving.engine import IncrementalServer, ServerStats
+from repro.serving.decode import make_serve_step

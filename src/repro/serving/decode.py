@@ -1,0 +1,57 @@
+"""Batched decode serving step (used by the decode_32k / long_500k shapes).
+
+``serve_step`` consumes ONE new token per sequence against per-layer KV /
+recurrent-state caches of ``seq_len`` and returns next-token logits plus the
+updated caches — the standard continuous-batching inner loop.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+
+
+def make_serve_step(cfg: ArchConfig, *, sample: bool = False, temperature: float = 1.0):
+    """Returns ``serve_step(params, caches, tokens, positions, rng?) ->
+    (next_tokens_or_logits, caches)``."""
+
+    def serve_step(params, caches, tokens, positions, rng: Optional[jax.Array] = None):
+        logits, caches = T.decode_step(params, cfg, tokens, caches, positions)
+        if not sample:
+            return logits, caches
+        if temperature == 0.0:
+            nxt = jnp.argmax(logits, axis=-1)
+        else:
+            assert rng is not None
+            nxt = jax.random.categorical(rng, logits / temperature, axis=-1)
+        return nxt.astype(jnp.int32), caches
+
+    return serve_step
+
+
+def greedy_decode(params, cfg: ArchConfig, prompt: jax.Array, n_new: int,
+                  cache_len: int = 0):
+    """Reference greedy decoding loop for tests/examples: prefill the prompt
+    token-by-token, then generate ``n_new`` tokens. prompt: [b, n]."""
+    b, n = prompt.shape
+    caches = T.init_caches(cfg, b, n + n_new, dtype=jnp.float32)
+    step = jax.jit(make_serve_step(cfg, sample=False))
+    tok = prompt[:, :1] if cfg.n_codebooks == 1 else prompt[:, :1]
+    out = []
+    cur = None
+    for i in range(n + n_new):
+        pos = jnp.full((b, 1), i, jnp.int32)
+        if i < n:
+            cur = prompt[:, i : i + 1]
+        logits, caches = step(params, caches, cur, pos)
+        cur = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        if cur.ndim == 3:  # audio: [b, 1, cb]
+            pass
+        if i >= n - 1:
+            out.append(cur)
+    return jnp.concatenate(out[:n_new], axis=1), caches

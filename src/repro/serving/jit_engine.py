@@ -1,0 +1,265 @@
+"""TPU-native incremental inference: the static-shape, jit-able version of
+``repro.core.incremental`` (DESIGN.md §3 "dirty-slot buffers").
+
+The host-side NumPy engine uses dynamic dirty sets — ideal for op counting,
+impossible to jit. This module implements the same algorithm for REPLACE
+edits with **static capacities**:
+
+* ``C`` — edit capacity: how many columns change per step (the edit bucket);
+* ``R`` — propagation capacity: how many rows may change per layer.
+
+Every step is one fixed-shape computation: gather dirty rows → dense
+per-location ops → column patch over all rows (the ``incr_patch`` Pallas
+kernel's math) → re-quantize (the ``vq_assign`` trick in score space) →
+scatter updates. If more than ``R`` rows change at any layer, the step
+reports ``overflow=True`` and the caller re-runs a full forward (the
+capacity-doubling / re-jit policy of serving systems).
+
+State layout (per document, all jnp, layer-stacked where possible):
+  x:      [L+1, n, d]   residual stream snapshots
+  q/k/v:  [L, n, H, dh]
+  vc:     [L, n, H, Q]  per-head value·codebook products
+  T:      [L, n, H, Q]  accumulated scores
+  codes:  [L, n, hq]
+
+Exactness: identical codes / float-tolerance states vs the NumPy engine
+(tested in tests/test_jit_engine.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.common.pytree import pytree_dataclass
+
+
+class JitState(NamedTuple):
+    tokens: jax.Array  # [n] int32
+    positions: jax.Array  # [n] int32
+    x: jax.Array  # [L+1, n, d]
+    q: jax.Array  # [L, n, H, dh]
+    k: jax.Array
+    v: jax.Array
+    vc: jax.Array  # [L, n, H, Q]
+    T: jax.Array  # [L, n, H, Q]
+    codes: jax.Array  # [L, n, hq]
+
+
+def _weights_from_params(params: dict, cfg: ArchConfig):
+    """Flatten stage params into per-layer stacked arrays (the engine's
+    LayerWeights, vectorized over L)."""
+    import numpy as np
+
+    from repro.core.incremental import IncrementalEngine
+
+    eng = IncrementalEngine(params, cfg)  # reuse its (validated) extraction
+    stack = lambda f: jnp.asarray(np.stack([f(W) for W in eng.layers]))
+    W = {
+        "ln1_s": stack(lambda w: w.ln1_s), "ln1_b": stack(lambda w: w.ln1_b),
+        "wq": stack(lambda w: w.wq), "bq": stack(lambda w: w.bq),
+        "wk": stack(lambda w: w.wk), "bk": stack(lambda w: w.bk),
+        "wv": stack(lambda w: w.wv), "bv": stack(lambda w: w.bv),
+        "bo": stack(lambda w: w.bo),
+        "ln2_s": stack(lambda w: w.ln2_s), "ln2_b": stack(lambda w: w.ln2_b),
+        "w_up": stack(lambda w: w.w_up), "b_up": stack(lambda w: w.b_up),
+        "w_down": stack(lambda w: w.w_down), "b_down": stack(lambda w: w.b_down),
+        "cb_per_head": stack(
+            lambda w: w.codebook.reshape(eng.hq, eng.Q, eng.heads_per_vq, eng.dh)
+            .transpose(0, 2, 1, 3).reshape(eng.H, eng.Q, eng.dh)
+        ),
+        "vq_bias": stack(lambda w: w.vq_bias),
+        "c_wo": stack(lambda w: w.c_wo),
+    }
+    meta = dict(H=eng.H, dh=eng.dh, d=eng.d, hq=eng.hq, Q=eng.Q,
+                heads_per_vq=eng.heads_per_vq, scale=float(eng.scale))
+    extras = {
+        "tok_emb": jnp.asarray(eng.tok_emb), "pos_emb": jnp.asarray(eng.pos_emb),
+        "fn_s": jnp.asarray(eng.fn_s), "fn_b": jnp.asarray(eng.fn_b),
+        "head_w": jnp.asarray(eng.head_w),
+    }
+    return W, extras, meta
+
+
+def _ln(x, s, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = x.var(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * s + b
+
+
+def _gelu(x):
+    return jax.nn.gelu(x.astype(jnp.float32), approximate=True)
+
+
+class JitIncrementalEngine:
+    """Static-capacity incremental engine for VQT replace-edits."""
+
+    def __init__(self, params: dict, cfg: ArchConfig, *, edit_capacity: int = 8,
+                 row_capacity: int = 64):
+        self.cfg = cfg
+        self.C = edit_capacity
+        self.R = row_capacity
+        self.W, self.extras, self.meta = _weights_from_params(params, cfg)
+        self.L = self.W["wq"].shape[0]
+
+    # ------------------------------------------------------------ full pass
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def full_forward(self, tokens: jax.Array, positions: jax.Array) -> JitState:
+        m = self.meta
+        n = tokens.shape[0]
+        x0 = self.extras["tok_emb"][tokens] + self.extras["pos_emb"][positions]
+        counts = jnp.arange(1, n + 1, dtype=jnp.float32)
+        causal = (jnp.arange(n)[None, :] <= jnp.arange(n)[:, None]).astype(jnp.float32)
+
+        def layer(x, Wl):
+            h = _ln(x, Wl["ln1_s"], Wl["ln1_b"])
+            q = jnp.einsum("nd,dhe->nhe", h, Wl["wq"]) + Wl["bq"]
+            k = jnp.einsum("nd,dhe->nhe", h, Wl["wk"]) + Wl["bk"]
+            v = jnp.einsum("nd,dhe->nhe", h, Wl["wv"]) + Wl["bv"]
+            vc = jnp.einsum("nhe,hqe->nhq", v, Wl["cb_per_head"])
+            w = _gelu(jnp.einsum("nhe,jhe->hnj", q, k) * m["scale"]) * causal[None]
+            T = jnp.einsum("hnj,jhq->nhq", w, vc)
+            s = T.reshape(n, m["hq"], m["heads_per_vq"], m["Q"]).sum(2)
+            s = s / counts[:, None, None] + Wl["vq_bias"][None]
+            codes = jnp.argmax(s, axis=-1).astype(jnp.int32)
+            attn = Wl["bo"][None] + sum(
+                Wl["c_wo"][hh][codes[:, hh]] for hh in range(m["hq"])
+            )
+            x_mid = x + attn
+            h2 = _ln(x_mid, Wl["ln2_s"], Wl["ln2_b"])
+            ffn = _gelu(h2 @ Wl["w_up"] + Wl["b_up"]) @ Wl["w_down"] + Wl["b_down"]
+            return x_mid + ffn, (q, k, v, vc, T, codes)
+
+        xs = [x0]
+        qs, ks, vs, vcs, Ts, cds = [], [], [], [], [], []
+        x = x0
+        for li in range(self.L):
+            Wl = jax.tree.map(lambda a: a[li], self.W)
+            x, (q, k, v, vc, T, codes) = layer(x, Wl)
+            xs.append(x)
+            qs.append(q); ks.append(k); vs.append(v)
+            vcs.append(vc); Ts.append(T); cds.append(codes)
+        st = lambda l: jnp.stack(l)
+        return JitState(tokens.astype(jnp.int32), positions.astype(jnp.int32),
+                        st(xs), st(qs), st(ks), st(vs), st(vcs), st(Ts), st(cds))
+
+    # ------------------------------------------------------------ edit step
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def apply_replaces(self, state: JitState, edit_pos: jax.Array,
+                       edit_tok: jax.Array) -> tuple[JitState, jax.Array]:
+        """edit_pos: [C] int32 (pad with -1); edit_tok: [C] int32.
+        Returns (new_state, overflow) — overflow=True means the propagation
+        bucket R was exceeded at some layer and the result is UNRELIABLE
+        (caller must full_forward)."""
+        m = self.meta
+        C, R = self.C, self.R
+        n = state.tokens.shape[0]
+        counts = jnp.arange(1, n + 1, dtype=jnp.float32)
+        valid_e = edit_pos >= 0
+        pos_safe = jnp.where(valid_e, edit_pos, 0)
+
+        tokens = state.tokens.at[pos_safe].set(
+            jnp.where(valid_e, edit_tok, state.tokens[pos_safe]))
+        x_rows = (self.extras["tok_emb"][tokens[pos_safe]]
+                  + self.extras["pos_emb"][state.positions[pos_safe]])
+
+        # dirty bucket for layer 0 = the edit bucket
+        dirty_idx = pos_safe  # [R0 = C]
+        dirty_valid = valid_e
+        dirty_rows = x_rows  # new residual-stream rows at dirty_idx
+
+        new_x = [state.x[0].at[dirty_idx].set(
+            jnp.where(dirty_valid[:, None], dirty_rows, state.x[0][dirty_idx]))]
+        new_q, new_k, new_v, new_vc, new_T, new_codes = [], [], [], [], [], []
+        overflow = jnp.asarray(False)
+
+        for li in range(self.L):
+            Wl = jax.tree.map(lambda a: a[li], self.W)
+            x_in = new_x[li]
+            Cd = dirty_idx.shape[0]
+            vmask = dirty_valid
+            # per-location at dirty rows
+            h = _ln(x_in[dirty_idx], Wl["ln1_s"], Wl["ln1_b"])
+            q_n = jnp.einsum("cd,dhe->che", h, Wl["wq"]) + Wl["bq"]
+            k_n = jnp.einsum("cd,dhe->che", h, Wl["wk"]) + Wl["bk"]
+            v_n = jnp.einsum("cd,dhe->che", h, Wl["wv"]) + Wl["bv"]
+            vc_n = jnp.einsum("che,hqe->chq", v_n, Wl["cb_per_head"])
+            k_old = state.k[li][dirty_idx]
+            vc_old = state.vc[li][dirty_idx]
+
+            q_all = state.q[li].at[dirty_idx].set(
+                jnp.where(vmask[:, None, None], q_n, state.q[li][dirty_idx]))
+            k_all = state.k[li].at[dirty_idx].set(
+                jnp.where(vmask[:, None, None], k_n, state.k[li][dirty_idx]))
+            v_all = state.v[li].at[dirty_idx].set(
+                jnp.where(vmask[:, None, None], v_n, state.v[li][dirty_idx]))
+            vc_all = state.vc[li].at[dirty_idx].set(
+                jnp.where(vmask[:, None, None], vc_n, state.vc[li][dirty_idx]))
+
+            # column patch over ALL rows (masked): ΔT = new − old contributions
+            col_mask = (
+                vmask[None, :]
+                & (dirty_idx[None, :] <= jnp.arange(n)[:, None])
+            ).astype(jnp.float32)  # [n, Cd]
+            s_new = jnp.einsum("nhe,che->nhc", state.q[li], k_all[dirty_idx]) * m["scale"]
+            s_old = jnp.einsum("nhe,che->nhc", state.q[li], k_old) * m["scale"]
+            dT = jnp.einsum("nhc,chq->nhq", _gelu(s_new) * col_mask[:, None, :],
+                            vc_all[dirty_idx]) - jnp.einsum(
+                "nhc,chq->nhq", _gelu(s_old) * col_mask[:, None, :], vc_old)
+            T_all = state.T[li] + dT
+            # dirty rows: full row recompute
+            causal_rows = (jnp.arange(n)[None, :] <= dirty_idx[:, None]).astype(
+                jnp.float32)  # [Cd, n]
+            w_rows = _gelu(jnp.einsum("che,jhe->hcj", q_all[dirty_idx], k_all)
+                           * m["scale"]) * causal_rows[None]
+            T_rows = jnp.einsum("hcj,jhq->chq", w_rows, vc_all)
+            T_all = T_all.at[dirty_idx].set(
+                jnp.where(vmask[:, None, None], T_rows, T_all[dirty_idx]))
+
+            # re-quantize all rows (cheap: O(n·Q))
+            s = T_all.reshape(n, m["hq"], m["heads_per_vq"], m["Q"]).sum(2)
+            s = s / counts[:, None, None] + Wl["vq_bias"][None]
+            codes = jnp.argmax(s, axis=-1).astype(jnp.int32)
+
+            changed = jnp.any(codes != state.codes[li], axis=-1)
+            changed = changed.at[dirty_idx].set(
+                jnp.where(vmask, True, changed[dirty_idx]))
+            n_changed = changed.sum()
+            overflow = overflow | (n_changed > R)
+
+            # gather up to R changed rows into the next dirty bucket
+            scores = jnp.where(changed, 1.0, 0.0)
+            _, next_idx = jax.lax.top_k(scores, R)
+            next_valid = changed[next_idx]
+
+            attn = Wl["bo"][None] + sum(
+                Wl["c_wo"][hh][codes[next_idx][:, hh]] for hh in range(m["hq"])
+            )
+            x_mid = x_in[next_idx] + attn
+            h2 = _ln(x_mid, Wl["ln2_s"], Wl["ln2_b"])
+            ffn = _gelu(h2 @ Wl["w_up"] + Wl["b_up"]) @ Wl["w_down"] + Wl["b_down"]
+            x_out_rows = x_mid + ffn
+
+            x_next = state.x[li + 1].at[next_idx].set(
+                jnp.where(next_valid[:, None], x_out_rows,
+                          state.x[li + 1][next_idx]))
+            new_x.append(x_next)
+            new_q.append(q_all); new_k.append(k_all); new_v.append(v_all)
+            new_vc.append(vc_all); new_T.append(T_all); new_codes.append(codes)
+            dirty_idx, dirty_valid = next_idx, next_valid
+
+        st = lambda l: jnp.stack(l)
+        return JitState(tokens, state.positions, st(new_x), st(new_q), st(new_k),
+                        st(new_v), st(new_vc), st(new_T), st(new_codes)), overflow
+
+    # ------------------------------------------------------------ outputs
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def logits_last(self, state: JitState) -> jax.Array:
+        h = _ln(state.x[-1][-1][None], self.extras["fn_s"], self.extras["fn_b"])[0]
+        return h @ self.extras["head_w"]

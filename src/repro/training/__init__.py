@@ -1,0 +1,3 @@
+from repro.training.optimizer import AdamWState, adamw_init, adamw_update, make_schedule
+from repro.training.losses import next_token_loss, distill_loss
+from repro.training.step import TrainState, make_train_step, make_distill_step, train_state_init

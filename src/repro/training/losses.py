@@ -1,0 +1,52 @@
+"""Training losses: next-token LM, distillation (Sanh et al. 2020), classification."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _log_softmax(x):
+    return jax.nn.log_softmax(x.astype(jnp.float32), axis=-1)
+
+
+def next_token_loss(logits: jax.Array, tokens: jax.Array, mask=None) -> jax.Array:
+    """logits [b, n, V] (audio: [b, n, cb, V]); tokens [b, n] (or [b, n, cb]).
+    Predict token t+1 from position t."""
+    logp = _log_softmax(logits[:, :-1])
+    targets = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    if nll.ndim == 3:  # audio codebooks: average over the codebook axis
+        nll = nll.mean(-1)
+    if mask is not None:
+        m = mask[:, 1:].astype(jnp.float32)
+        return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.mean(nll)
+
+
+def distill_loss(
+    student_logits: jax.Array,
+    teacher_logits: jax.Array,
+    tokens: jax.Array,
+    *,
+    alpha_ce: float = 5.0,
+    alpha_lm: float = 2.0,
+    temperature: float = 2.0,
+) -> tuple[jax.Array, dict]:
+    """DistilBERT-style loss: KL(teacher‖student) at temperature + hard LM
+    loss (paper §4 follows Sanh et al. 2020)."""
+    t = temperature
+    s_logp = _log_softmax(student_logits[:, :-1] / t)
+    t_logp = _log_softmax(teacher_logits[:, :-1] / t)
+    t_p = jnp.exp(t_logp)
+    kl = jnp.sum(t_p * (t_logp - s_logp), axis=-1).mean() * t * t
+    lm = next_token_loss(student_logits, tokens)
+    loss = alpha_ce * kl + alpha_lm * lm
+    return loss, {"kl": kl, "lm": lm}
+
+
+def classification_loss(logits: jax.Array, labels: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """logits [b, C]; labels [b]. Returns (loss, accuracy)."""
+    logp = _log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return jnp.mean(nll), acc

@@ -1,0 +1,89 @@
+"""AdamW + LR schedules in pure JAX (no optax dependency)."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.pytree import pytree_dataclass, static_field
+
+
+@pytree_dataclass
+class AdamWState:
+    step: jax.Array
+    mu: dict
+    nu: dict
+
+
+@pytree_dataclass
+class AdamWConfig:
+    b1: float = static_field(default=0.9)
+    b2: float = static_field(default=0.95)
+    eps: float = static_field(default=1e-8)
+    weight_decay: float = static_field(default=0.1)
+    grad_clip: float = static_field(default=1.0)
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda t: jax.tree.map(lambda a: jnp.zeros_like(a, dtype=jnp.float32), t)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros(params), nu=zeros(params))
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(a.astype(jnp.float32))) for a in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(
+    params,
+    grads,
+    state: AdamWState,
+    lr: jax.Array,
+    cfg: AdamWConfig = AdamWConfig(),
+):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+    step = state.step + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    mu = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g, state.nu, grads)
+
+    def upd(p, m, v):
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamWState(step=step, mu=mu, nu=nu), {"grad_norm": gnorm}
+
+
+def make_schedule(
+    *,
+    peak_lr: float,
+    warmup_steps: int,
+    total_steps: int,
+    final_lr: float = 0.0,
+    kind: str = "cosine",
+) -> Callable[[jax.Array], jax.Array]:
+    """Linear warmup then cosine (or linear) decay — paper §4 uses 5K warmup
+    to 5e-4 then cosine to 5e-5."""
+
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        prog = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        if kind == "cosine":
+            decay = final_lr + 0.5 * (peak_lr - final_lr) * (1 + jnp.cos(jnp.pi * prog))
+        else:
+            decay = peak_lr + (final_lr - peak_lr) * prog
+        return jnp.where(step < warmup_steps, warm, decay)
+
+    return schedule

@@ -1,0 +1,128 @@
+"""Train / distill steps with gradient accumulation and mixed precision."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.pytree import pytree_dataclass
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+from repro.training.losses import distill_loss, next_token_loss
+from repro.training.optimizer import AdamWConfig, AdamWState, adamw_init, adamw_update
+
+
+@pytree_dataclass
+class TrainState:
+    params: dict
+    opt: AdamWState
+    rng: jax.Array
+
+
+def train_state_init(key: jax.Array, cfg: ArchConfig, dtype=jnp.float32) -> TrainState:
+    pkey, rkey = jax.random.split(key)
+    params = T.init_params(pkey, cfg, dtype)
+    return TrainState(params=params, opt=adamw_init(params), rng=rkey)
+
+
+def _lm_loss_fn(params, cfg: ArchConfig, batch: dict, rng, *, aux_weight: float = 1.0):
+    logits, aux = T.forward(
+        params,
+        cfg,
+        batch["tokens"],
+        batch.get("positions"),
+        patch_embeds=batch.get("patch_embeds"),
+        train=True,
+        rng=rng,
+    )
+    n_text = batch["tokens"].shape[1]
+    lm = next_token_loss(logits[:, -n_text:], batch["tokens"], batch.get("mask"))
+    loss = lm + aux_weight * aux["aux_loss"]
+    if "mtp_logits" in aux:
+        # predict token t+2 from position t (shift targets by one extra)
+        mtp = next_token_loss(aux["mtp_logits"][:, :-1], batch["tokens"][:, 1:])
+        loss = loss + 0.3 * mtp
+    return loss, {"lm_loss": lm, "aux_loss": aux["aux_loss"]}
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    schedule: Callable[[jax.Array], jax.Array],
+    opt_cfg: AdamWConfig = AdamWConfig(),
+    *,
+    accum_steps: int = 1,
+    donate: bool = True,
+):
+    """Returns jit-able ``step(state, batch) -> (state, metrics)``.
+
+    With ``accum_steps > 1`` the batch's leading axis is split into
+    microbatches and gradients are averaged under ``lax.scan`` (keeps live
+    activation memory to one microbatch)."""
+
+    def step(state: TrainState, batch: dict):
+        rng, new_rng = jax.random.split(state.rng)
+        grad_fn = jax.grad(_lm_loss_fn, has_aux=True)
+        if accum_steps == 1:
+            grads, metrics = grad_fn(state.params, cfg, batch, rng)
+        else:
+            micro = jax.tree.map(
+                lambda a: a.reshape(accum_steps, a.shape[0] // accum_steps, *a.shape[1:]),
+                batch,
+            )
+
+            def body(acc, mb):
+                g, m = grad_fn(state.params, cfg, mb, rng)
+                return jax.tree.map(jnp.add, acc, g), m
+
+            zero = jax.tree.map(lambda a: jnp.zeros_like(a, jnp.float32), state.params)
+            grads, metrics = jax.lax.scan(body, zero, micro)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        lr = schedule(state.opt.step)
+        params, opt, om = adamw_update(state.params, grads, state.opt, lr, opt_cfg)
+        metrics = {**metrics, **om, "lr": lr}
+        return TrainState(params=params, opt=opt, rng=new_rng), metrics
+
+    return step
+
+
+def make_distill_step(
+    student_cfg: ArchConfig,
+    teacher_cfg: ArchConfig,
+    schedule: Callable[[jax.Array], jax.Array],
+    opt_cfg: AdamWConfig = AdamWConfig(),
+    *,
+    aux_weight: float = 1.0,
+):
+    """Distillation step (paper §4: adapt OPT to VQ-OPT via Sanh et al.).
+
+    ``step(state, teacher_params, batch) -> (state, metrics)``. The teacher
+    runs in eval mode; the student trains with KL + LM + VQ auxiliary loss.
+    """
+
+    def loss_fn(params, teacher_params, batch, rng):
+        t_logits, _ = T.forward(
+            teacher_params, teacher_cfg, batch["tokens"], batch.get("teacher_positions")
+        )
+        s_logits, aux = T.forward(
+            params, student_cfg, batch["tokens"], batch.get("positions"),
+            train=True, rng=rng,
+        )
+        loss, parts = distill_loss(s_logits, t_logits, batch["tokens"])
+        loss = loss + aux_weight * aux["aux_loss"]
+        return loss, {**parts, "aux_loss": aux["aux_loss"]}
+
+    def step(state: TrainState, teacher_params: dict, batch: dict):
+        rng, new_rng = jax.random.split(state.rng)
+        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state.params, teacher_params, batch, rng
+        )
+        lr = schedule(state.opt.step)
+        params, opt, om = adamw_update(state.params, grads, state.opt, lr, opt_cfg)
+        return TrainState(params=params, opt=opt, rng=new_rng), {
+            "loss": loss, **parts, **om, "lr": lr,
+        }
+
+    return step

@@ -1,0 +1,12 @@
+import os
+import sys
+
+# tests must see the single real CPU device (the 512-device override is
+# strictly dryrun.py-local, per the spec)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,33 @@
+"""Checkpoint save/restore."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import restore_pytree, save_pytree
+from repro.configs.vq_opt_125m import smoke_config
+from repro.training import train_state_init
+
+
+def test_roundtrip_train_state(tmp_path):
+    cfg = smoke_config(vqt=True)
+    state = train_state_init(jax.random.PRNGKey(0), cfg)
+    p = str(tmp_path / "ckpt.npz")
+    save_pytree(p, state, metadata={"step": 0})
+    restored = restore_pytree(p, state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    p = str(tmp_path / "x.npz")
+    save_pytree(p, {"w": jnp.zeros((2, 3))})
+    with pytest.raises(ValueError):
+        restore_pytree(p, {"w": jnp.zeros((3, 2))})
+
+
+def test_restore_missing_key_raises(tmp_path):
+    p = str(tmp_path / "y.npz")
+    save_pytree(p, {"w": jnp.zeros((2,))})
+    with pytest.raises(KeyError):
+        restore_pytree(p, {"w": jnp.zeros((2,)), "b": jnp.zeros((1,))})

@@ -1,0 +1,95 @@
+"""Property tests for the compressed activation format (paper §3.1-3.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compressed as C
+
+
+def _random_compressed(rng, b, n, q, d):
+    rows = jnp.asarray(rng.standard_normal((q, d)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, q, (b, n)), jnp.int32)
+    return C.from_dense_rows(rows, idx)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 5), n=st.integers(1, 16), q=st.integers(1, 8),
+    d=st.integers(1, 9), seed=st.integers(0, 2**31 - 1),
+)
+def test_per_location_equals_dense(b, n, q, d, seed):
+    """(P, F(C)) == F(dense) for per-location ops (paper eq. 2)."""
+    rng = np.random.default_rng(seed)
+    c = _random_compressed(rng, b, n, q, d)
+    f = lambda x: jnp.tanh(x) * 2.0 + 1.0
+    out = C.per_location(f, c)
+    np.testing.assert_allclose(out.to_dense(), f(c.to_dense()), rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 4), n=st.integers(1, 12), qa=st.integers(1, 6),
+    qb=st.integers(1, 6), d=st.integers(1, 8), seed=st.integers(0, 2**31 - 1),
+)
+def test_binary_equals_dense(b, n, qa, qb, d, seed):
+    """Binary element-wise ops on unique index pairs (App. A.3)."""
+    rng = np.random.default_rng(seed)
+    a = _random_compressed(rng, b, n, qa, d)
+    c = _random_compressed(rng, b, n, qb, d)
+    out = C.add(a, c)
+    np.testing.assert_allclose(out.to_dense(), a.to_dense() + c.to_dense(), rtol=1e-6)
+    # codebook growth is bounded by unique pairs
+    assert int(out.n_codes) <= qa * qb
+    assert int(out.n_codes) <= b * n
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 4), n=st.integers(1, 12), q=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_recompress_drops_unused(b, n, q, seed):
+    rng = np.random.default_rng(seed)
+    c = _random_compressed(rng, b, n, q, 4)
+    r = C.recompress(c)
+    np.testing.assert_allclose(r.to_dense(), c.to_dense(), rtol=1e-6)
+    assert int(r.n_codes) == len(np.unique(np.asarray(c.idx)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 16), b=st.integers(1, 6), n_edit=st.integers(0, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_base_and_deltas_storage_bound(n, b, n_edit, seed):
+    """The sparse batch representation is O(n + b) when rows are near-equal
+    (paper §3.1 fig. 2)."""
+    rng = np.random.default_rng(seed)
+    base_idx = rng.integers(0, n + 1, n)
+    idx = np.tile(base_idx, (b, 1))
+    for _ in range(n_edit):  # a few per-row deviations
+        idx[rng.integers(b), rng.integers(n)] = rng.integers(0, n + 1)
+    rows = jnp.asarray(rng.standard_normal((n + 1, 4)), jnp.float32)
+    c = C.from_dense_rows(rows, jnp.asarray(idx, jnp.int32))
+    base, delta = C.base_and_deltas(c)
+    # reconstruct
+    rec = np.where(np.asarray(delta), np.asarray(c.idx), np.asarray(base)[None, :])
+    np.testing.assert_array_equal(rec, idx)
+    assert int(np.asarray(delta).sum()) <= n_edit * 2 + b  # near-sparse
+
+
+def test_from_tokens_is_compressed():
+    emb = jnp.asarray(np.random.default_rng(0).standard_normal((10, 4)), jnp.float32)
+    toks = jnp.asarray([[1, 2, 3], [1, 2, 9]], jnp.int32)
+    c = C.from_tokens(emb, toks)
+    np.testing.assert_allclose(c.to_dense(), emb[toks], rtol=1e-7)
+
+
+def test_compress_dedups_rows():
+    rows = np.random.default_rng(0).standard_normal((4, 3)).astype(np.float32)
+    x = jnp.asarray(rows[[0, 1, 0, 2, 2, 1]]).reshape(2, 3, 3)
+    c = C.compress(x)
+    assert int(c.n_codes) == 3
+    np.testing.assert_allclose(c.to_dense(), x, rtol=1e-7)

@@ -1,0 +1,28 @@
+"""Edit-script properties (paper §3.3 / §4 alignment)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.edits import apply_edits, edit_script, random_revision
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    old=st.lists(st.integers(0, 9), min_size=1, max_size=40),
+    new=st.lists(st.integers(0, 9), min_size=1, max_size=40),
+)
+def test_edit_script_roundtrip(old, new):
+    """apply_edits(old, edit_script(old, new)) == new, for arbitrary pairs."""
+    script = edit_script(old, new)
+    assert apply_edits(old, script) == list(new)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), frac=st.sampled_from([0.01, 0.05, 0.2]))
+def test_random_revision_edit_fraction(seed, frac):
+    rng = np.random.default_rng(seed)
+    old = list(rng.integers(0, 100, 200))
+    new = random_revision(rng, old, 100, frac)
+    script = edit_script(old, new)
+    # the revision generator applies ~frac*n atomic edits; alignment can only
+    # find fewer-or-equal
+    assert 0 < len(script) <= max(3, int(3 * frac * len(old)) + 8)

@@ -1,0 +1,153 @@
+"""THE paper's correctness property: incremental inference over a VQT is
+*exact* — identical VQ codes and (float-tolerance) identical hidden states to
+recomputing the edited document from scratch — while costing a fraction of
+the arithmetic operations."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.vq_opt_125m import smoke_config
+from repro.core.edits import Edit, apply_edit
+from repro.core.incremental import IncrementalEngine
+from repro.core.opcount import OpCounter
+from repro.core.positional import PositionAllocator
+from repro.models import transformer as T
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_config(vqt=True)
+    params = T.init_params(jax.random.PRNGKey(1), cfg)
+    return cfg, params, IncrementalEngine(params, cfg)
+
+
+def _doc(cfg, n=48, seed=0):
+    rng = np.random.default_rng(seed)
+    tokens = rng.integers(0, cfg.vocab, n)
+    positions = np.arange(n) * 7  # gapped ids
+    return tokens, positions
+
+
+def _assert_state_equal(a, b, atol=5e-5):
+    for la, lb in zip(a.layers, b.layers):
+        np.testing.assert_array_equal(la.codes, lb.codes)
+    for xa, xb in zip(a.xs, b.xs):
+        np.testing.assert_allclose(xa, xb, atol=atol)
+
+
+def test_engine_matches_jax_forward(setup):
+    cfg, params, eng = setup
+    tokens, positions = _doc(cfg)
+    st_ = eng.full_forward(tokens, positions)
+    logits_jax, _ = T.forward(
+        params, cfg, jnp.asarray(tokens)[None], jnp.asarray(positions)[None]
+    )
+    np.testing.assert_allclose(
+        eng.logits_at(st_), np.asarray(logits_jax[0, -1]), atol=2e-4
+    )
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n_edits=st.integers(1, 4))
+def test_replace_exactness(setup, seed, n_edits):
+    cfg, params, eng = setup
+    tokens, positions = _doc(cfg, seed=seed % 7)
+    base = eng.full_forward(tokens, positions)
+    rng = np.random.default_rng(seed)
+    pos_list = list(rng.choice(len(tokens), n_edits, replace=False))
+    new_toks = list(rng.integers(0, cfg.vocab, n_edits))
+    inc = eng.apply_replaces(base, pos_list, new_toks)
+    t2 = tokens.copy()
+    t2[pos_list] = new_toks
+    full = eng.full_forward(t2, positions)
+    _assert_state_equal(inc, full)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_insert_exactness(setup, seed):
+    cfg, params, eng = setup
+    tokens, positions = _doc(cfg, seed=seed % 5)
+    base = eng.full_forward(tokens, positions)
+    rng = np.random.default_rng(seed)
+    p = int(rng.integers(0, len(tokens) + 1))
+    lo = positions[p - 1] if p > 0 else -1
+    hi = positions[p] if p < len(tokens) else positions[-1] + 8
+    pid = int((lo + hi) // 2)
+    tok = int(rng.integers(0, cfg.vocab))
+    inc = eng.apply_insert(base, p, tok, pid)
+    full = eng.full_forward(np.insert(tokens, p, tok), np.insert(positions, p, pid))
+    _assert_state_equal(inc, full)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_delete_exactness(setup, seed):
+    cfg, params, eng = setup
+    tokens, positions = _doc(cfg, seed=seed % 5)
+    base = eng.full_forward(tokens, positions)
+    rng = np.random.default_rng(seed)
+    p = int(rng.integers(0, len(tokens)))
+    inc = eng.apply_delete(base, p)
+    full = eng.full_forward(np.delete(tokens, p), np.delete(positions, p))
+    _assert_state_equal(inc, full)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_random_edit_stream_exactness(setup, seed):
+    """Mixed replace/insert/delete stream with a real allocator — the full
+    online serving scenario stays exact edit after edit."""
+    cfg, params, eng = setup
+    rng = np.random.default_rng(seed)
+    n = 32
+    tokens = list(rng.integers(0, cfg.vocab, n))
+    alloc = PositionAllocator(n, pool_size=cfg.pos_pool)
+    state = eng.full_forward(tokens, alloc.positions)
+    for _ in range(5):
+        op = ["replace", "insert", "delete"][rng.integers(3)]
+        if op == "replace":
+            e = Edit("replace", int(rng.integers(len(tokens))), int(rng.integers(cfg.vocab)))
+        elif op == "insert":
+            e = Edit("insert", int(rng.integers(len(tokens) + 1)), int(rng.integers(cfg.vocab)))
+        else:
+            e = Edit("delete", int(rng.integers(len(tokens))))
+        state = eng.apply_edit(state, e, alloc)
+        tokens = apply_edit(tokens, e)
+    full = eng.full_forward(tokens, alloc.positions)
+    _assert_state_equal(state, full)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), frac=st.sampled_from([0.02, 0.1, 0.3]))
+def test_apply_revision_exactness(setup, seed, frac):
+    """Batched offline revision (one column-patch sweep per layer) is exact."""
+    from repro.core.edits import random_revision
+
+    cfg, params, eng = setup
+    rng = np.random.default_rng(seed)
+    n = 48
+    tokens = rng.integers(0, cfg.vocab, n)
+    alloc = PositionAllocator(n, cfg.pos_pool)
+    base = eng.full_forward(tokens, alloc.positions)
+    new = np.asarray(random_revision(rng, tokens, cfg.vocab, frac))
+    inc = eng.apply_revision(base, new, alloc)
+    full = eng.full_forward(new, np.asarray(alloc.positions))
+    _assert_state_equal(inc, full)
+
+
+def test_incremental_is_cheaper(setup):
+    cfg, params, _ = setup
+    c_full, c_inc = OpCounter(), OpCounter()
+    e_full = IncrementalEngine(params, cfg, c_full)
+    e_inc = IncrementalEngine(params, cfg, c_inc)
+    tokens, positions = _doc(cfg, n=96)
+    base = e_inc.full_forward(tokens, positions)
+    c_inc.counts.clear()
+    t2 = tokens.copy()
+    t2[40] = (t2[40] + 1) % cfg.vocab
+    e_full.full_forward(t2, positions)
+    e_inc.apply_replaces(base, [40], [t2[40]])
+    assert c_inc.total < c_full.total / 2, (c_inc.total, c_full.total)

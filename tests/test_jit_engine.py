@@ -1,0 +1,71 @@
+"""The jit-able static-bucket engine == the NumPy engine == full forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.vq_opt_125m import smoke_config
+from repro.core.incremental import IncrementalEngine
+from repro.models import transformer as T
+from repro.serving.jit_engine import JitIncrementalEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_config(vqt=True)
+    params = T.init_params(jax.random.PRNGKey(1), cfg)
+    jeng = JitIncrementalEngine(params, cfg, edit_capacity=4, row_capacity=32)
+    neng = IncrementalEngine(params, cfg)
+    return cfg, jeng, neng
+
+
+def _doc(cfg, n=40, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab, n), np.arange(n) * 5
+
+
+def test_jit_full_forward_matches_numpy(setup):
+    cfg, jeng, neng = setup
+    tokens, positions = _doc(cfg)
+    js = jeng.full_forward(jnp.asarray(tokens), jnp.asarray(positions))
+    ns = neng.full_forward(tokens, positions)
+    for li in range(len(neng.layers)):
+        np.testing.assert_array_equal(np.asarray(js.codes[li]), ns.layers[li].codes)
+    np.testing.assert_allclose(np.asarray(js.x[-1]), ns.xs[-1], atol=3e-4)
+
+
+def test_jit_replace_matches_numpy(setup):
+    cfg, jeng, neng = setup
+    tokens, positions = _doc(cfg, seed=1)
+    js = jeng.full_forward(jnp.asarray(tokens), jnp.asarray(positions))
+    ns = neng.full_forward(tokens, positions)
+    rng = np.random.default_rng(2)
+    for trial in range(3):
+        pos = sorted(rng.choice(len(tokens), 2, replace=False))
+        tok = rng.integers(0, cfg.vocab, 2)
+        edit_pos = jnp.asarray(list(pos) + [-1, -1], jnp.int32)  # C=4 bucket
+        edit_tok = jnp.asarray(list(tok) + [0, 0], jnp.int32)
+        js2, overflow = jeng.apply_replaces(js, edit_pos, edit_tok)
+        assert not bool(overflow)
+        ns2 = neng.apply_replaces(ns, list(pos), list(tok))
+        for li in range(len(neng.layers)):
+            np.testing.assert_array_equal(
+                np.asarray(js2.codes[li]), ns2.layers[li].codes)
+        np.testing.assert_allclose(np.asarray(js2.x[-1]), ns2.xs[-1], atol=3e-4)
+        np.testing.assert_allclose(
+            np.asarray(jeng.logits_last(js2)), neng.logits_at(ns2), atol=3e-4)
+        js, ns = js2, ns2
+        tokens = np.asarray(js.tokens)
+
+
+def test_jit_overflow_flag(setup):
+    """A tiny row capacity must trip the overflow flag on a wide edit."""
+    cfg, jeng, neng = setup
+    params = T.init_params(jax.random.PRNGKey(1), cfg)
+    tight = JitIncrementalEngine(params, cfg, edit_capacity=4, row_capacity=2)
+    tokens, positions = _doc(cfg, seed=3)
+    js = tight.full_forward(jnp.asarray(tokens), jnp.asarray(positions))
+    edit_pos = jnp.asarray([1, 2, 3, 4], jnp.int32)
+    edit_tok = jnp.asarray([9, 9, 9, 9], jnp.int32)
+    _, overflow = tight.apply_replaces(js, edit_pos, edit_tok)
+    assert bool(overflow)  # 4 edits alone exceed R=2

@@ -1,0 +1,42 @@
+"""Sampled positional embeddings and the gap allocator (paper §3.3, App. B)."""
+import jax
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.positional import PositionAllocator, sample_positions, spread_positions
+
+
+def test_sample_positions_sorted_unique():
+    pos = np.asarray(sample_positions(jax.random.PRNGKey(0), 50, 1000))
+    assert (np.diff(pos) > 0).all()
+    assert pos.min() >= 0 and pos.max() < 1000
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 64), seed=st.integers(0, 100))
+def test_allocator_insert_keeps_order(n, seed):
+    rng = np.random.default_rng(seed)
+    alloc = PositionAllocator(n, pool_size=n * 64)
+    for _ in range(32):
+        i = int(rng.integers(0, len(alloc) + 1))
+        pid = alloc.insert_at(i)
+        if pid is None:
+            alloc.defragment()
+        pos = alloc.positions
+        assert all(pos[j] < pos[j + 1] for j in range(len(pos) - 1))
+
+
+def test_allocator_exhaustion_triggers_none():
+    alloc = PositionAllocator(4, pool_size=8)
+    hits = 0
+    for _ in range(16):
+        if alloc.insert_at(1) is None:
+            hits += 1
+            alloc.defragment()
+    assert hits >= 1  # tiny pool must exhaust and defragment
+
+
+def test_spread_positions_has_gaps():
+    pos = spread_positions(10, 1000)
+    gaps = np.diff(pos)
+    assert gaps.min() >= 99  # ~pool/n spacing for insertions

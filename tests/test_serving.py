@@ -1,0 +1,68 @@
+"""Incremental serving engine (online + offline paths)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.vq_opt_125m import smoke_config
+from repro.core.edits import Edit
+from repro.core.incremental import IncrementalEngine
+from repro.models import transformer as T
+from repro.serving.engine import IncrementalServer
+
+
+@pytest.fixture(scope="module")
+def server():
+    cfg = smoke_config(vqt=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    return IncrementalServer(jax.device_get(params), cfg), cfg, params
+
+
+def test_online_edits_stay_consistent(server):
+    srv, cfg, params = server
+    rng = np.random.default_rng(0)
+    doc = list(rng.integers(0, cfg.vocab, 40))
+    srv.open_document("a", doc)
+    edits = [Edit("replace", 5, 7), Edit("insert", 11, 9), Edit("delete", 0),
+             Edit("insert", 39, 3), Edit("replace", 20, 1)]
+    expect = list(doc)
+    from repro.core.edits import apply_edit
+
+    for e in edits:
+        srv.apply_edit("a", e)
+        expect = apply_edit(expect, e)
+    assert list(srv.tokens("a")) == expect
+    # state equals recomputing from scratch with the server's positions
+    eng = IncrementalEngine(jax.device_get(params), cfg)
+    fresh = eng.full_forward(expect, srv.docs["a"].allocator.positions)
+    np.testing.assert_allclose(
+        srv.docs["a"].state.xs[-1], fresh.xs[-1], atol=5e-5
+    )
+
+
+def test_offline_revision_and_speedup(server):
+    srv, cfg, params = server
+    rng = np.random.default_rng(1)
+    doc = list(rng.integers(0, cfg.vocab, 64))
+    srv.open_document("b", doc)
+    new = list(doc)
+    new[10] = 3
+    new[30] = 4
+    del new[50]
+    ops = srv.submit_revision("b", new)
+    assert list(srv.tokens("b")) == new
+    assert ops < srv._dense_ops(len(new)), "incremental must beat from-scratch"
+
+
+def test_defrag_counted(server):
+    srv, cfg, params = server
+    # tiny positional pool forces defragmentation under repeated inserts
+    small = IncrementalServer(
+        jax.device_get(params), cfg, pos_pool=80
+    )
+    rng = np.random.default_rng(2)
+    doc = list(rng.integers(0, cfg.vocab, 40))
+    small.open_document("c", doc)
+    for i in range(30):
+        small.apply_edit("c", Edit("insert", 20, int(rng.integers(cfg.vocab))))
+    assert small.stats.defrags >= 1
+    assert len(small.tokens("c")) == 70

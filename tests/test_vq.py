@@ -1,0 +1,71 @@
+"""Vector-quantization module tests (paper §3, §4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import vq as V
+
+
+def _params(key, d, heads, q=64):
+    cfg = V.VQConfig(n_heads=heads, codebook_size=q)
+    return V.init(key, d, cfg), cfg
+
+
+def test_assign_is_nearest():
+    key = jax.random.PRNGKey(0)
+    params, cfg = _params(key, 16, 2, q=8)
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+    idx = V.assign(params, x)
+    xh = x.reshape(32, 2, 8)
+    d2 = jnp.sum(
+        (xh[:, :, None, :] - params.codebook[None]) ** 2, axis=-1
+    )  # [n, h, q]
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(jnp.argmin(d2, -1)))
+
+
+def test_quantize_idempotent():
+    """VQ(VQ(x)) == VQ(x): codebook vectors quantize to themselves."""
+    key = jax.random.PRNGKey(0)
+    params, cfg = _params(key, 16, 2, q=8)
+    x = jax.random.normal(jax.random.PRNGKey(1), (10, 16))
+    xq, idx = V.quantize(params, x)
+    xq2, idx2 = V.quantize(params, xq)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(idx2))
+    np.testing.assert_allclose(np.asarray(xq), np.asarray(xq2), atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(heads=st.sampled_from([1, 2, 4]), q=st.sampled_from([4, 64]),
+       seed=st.integers(0, 1000))
+def test_combined_code_roundtrip(heads, q, seed):
+    rng = np.random.default_rng(seed)
+    idx = jnp.asarray(rng.integers(0, q, (5, 7, heads)), jnp.int32)
+    code = V.combined_code(idx, q)
+    back = V.split_code(code, q, heads)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(idx))
+
+
+def test_train_mode_gradients_flow():
+    key = jax.random.PRNGKey(0)
+    params, cfg = _params(key, 16, 2, q=8)
+    x = jax.random.normal(jax.random.PRNGKey(1), (6, 16))
+
+    def loss(p, x):
+        xq, idx, aux = V.forward_train(p, x, cfg, rng=jax.random.PRNGKey(2))
+        return jnp.sum(xq ** 2) + aux
+
+    gp, gx = jax.grad(loss, argnums=(0, 1))(params, x)
+    assert np.isfinite(np.asarray(gx)).all()
+    assert np.isfinite(np.asarray(gp.codebook)).all()
+    assert float(jnp.abs(gx).sum()) > 0  # straight-through passes gradient
+    assert float(jnp.abs(gp.codebook).sum()) > 0
+
+
+def test_eval_equals_hard_assignment_of_train_mode():
+    key = jax.random.PRNGKey(0)
+    params, cfg = _params(key, 8, 2, q=16)
+    x = jax.random.normal(jax.random.PRNGKey(3), (11, 8))
+    _, idx_train, _ = V.forward_train(params, x, cfg, rng=None)  # no gumbel noise
+    _, idx_eval = V.quantize(params, x)
+    np.testing.assert_array_equal(np.asarray(idx_train), np.asarray(idx_eval))
