@@ -1,11 +1,17 @@
 """Paper §3.1–3.2 batch claim: "any batch operation in the network can be
 computed with an equivalent complexity to processing a single document".
 
-We process a batch of b revisions of one document through the engine
-(shared base + per-revision deltas, the compressed 'base + sparse index
-deltas' representation of fig. 2 in execution form) and report
-ops(batch) / ops(single) versus b. Dense cost grows as b; the compressed
-path should stay near-flat (1 + b·edit_fraction·const).
+Two measurements:
+
+1. **op-count** (the paper's metric): a batch of b revisions of one document
+   through the NumPy engine (shared base + per-revision deltas) —
+   ops(batch) / ops(single) versus b. Dense cost grows as b; the compressed
+   path stays near-flat (1 + b·edit_fraction·const).
+2. **wall-clock, batched jit path** (ISSUE 1 tentpole): b independent
+   documents each with one pending replace-edit, served by ONE vmapped
+   fixed-shape `batch_apply_replaces` dispatch. Reported as per-edit
+   wall-clock relative to the single-document jit step — the acceptance bar
+   is ≤ 1.5x at batch ≥ 8.
 """
 from __future__ import annotations
 
@@ -62,13 +68,40 @@ def run(doc_len=384, max_batch=16, edit_fraction=0.02, seed=0):
     return rows
 
 
+def run_jit_batched(doc_len=256, batches=(1, 2, 4, 8, 16), edit_capacity=4,
+                    row_capacity=64, seed=1, iters=20):
+    """Wall-clock of the batched jit path: per-edit time vs the single-doc
+    jit step (each document carries one distinct edit per dispatch)."""
+    from benchmarks.common import batched_step_wallclock
+
+    t_single, rows = batched_step_wallclock(
+        doc_len, batches, edit_capacity=edit_capacity,
+        row_capacity=row_capacity, seed=seed, iters=iters, random_edits=True,
+        csv_name="batch_scaling_jit.csv", per_label="per-edit")
+    worst_big = max((r[3] for r in rows if r[0] >= 8), default=None)
+    if worst_big is not None:
+        verdict = "PASS" if worst_big <= 1.5 else "FAIL"
+        print(f"  per-edit at batch>=8: {worst_big:.2f}x single-doc step "
+              f"(bar: 1.5x) -> {verdict}")
+    return t_single, rows
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--doc-len", type=int, default=384)
     ap.add_argument("--max-batch", type=int, default=16)
     ap.add_argument("--fraction", type=float, default=0.02)
+    ap.add_argument("--jit-doc-len", type=int, default=256)
+    ap.add_argument("--batches", type=int, nargs="+", default=[1, 2, 4, 8, 16])
+    ap.add_argument("--skip-opcount", action="store_true")
+    ap.add_argument("--skip-jit", action="store_true")
     args = ap.parse_args()
-    run(args.doc_len, args.max_batch, args.fraction)
+    if not args.skip_opcount:
+        print("op-count (NumPy engine, batch of revisions):")
+        run(args.doc_len, args.max_batch, args.fraction)
+    if not args.skip_jit:
+        print("wall-clock (batched jit engine, one edit per document):")
+        run_jit_batched(args.jit_doc_len, tuple(args.batches))
 
 
 if __name__ == "__main__":

@@ -51,6 +51,97 @@ def make_vqt_engine(seed: int = 0, trained_params=None, vq_heads: int = 2):
     return IncrementalEngine(jax.device_get(params), cfg, counter), cfg, counter
 
 
+def timeit(fn, iters: int) -> float:
+    """Mean seconds per call after one warmup/compile call."""
+    import time
+
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+def make_batched_jit_setup(n: int, max_b: int, *, edit_capacity: int = 4,
+                           row_capacity: int = 64, seed: int = 1):
+    """Shared harness for the batched-serving wall-clock benchmarks: a
+    BatchedJitEngine, a single-doc engine sharing its weight stacks, and an
+    ingested batched state of ``max_b`` documents of length ``n``.
+    Returns (cfg, batched_engine, single_engine, batched_state)."""
+    import jax.numpy as jnp
+
+    from repro.configs.vq_opt_125m import smoke_config
+    from repro.models import transformer as T
+    from repro.serving.batch_engine import BatchedJitEngine
+    from repro.serving.jit_engine import JitIncrementalEngine
+
+    cfg = smoke_config(vqt=True)
+    params = T.init_params(jax.random.PRNGKey(seed), cfg)
+    eng = BatchedJitEngine(params, cfg, edit_capacity=edit_capacity,
+                           row_capacity=row_capacity)
+    seng = JitIncrementalEngine({}, cfg, edit_capacity=edit_capacity,
+                                row_capacity=row_capacity, _weights=eng.weights)
+    from repro.core.positional import spread_positions
+
+    rng = np.random.default_rng(seed)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (max_b, n)), jnp.int32)
+    # gapped ids spread over the pool — arange(n)*k would overflow the
+    # positional table for long documents and silently clamp
+    positions = jnp.asarray(
+        np.tile(spread_positions(n, cfg.pos_pool), (max_b, 1)), jnp.int32)
+    bstate = jax.block_until_ready(eng.batch_full_forward(tokens, positions))
+    return cfg, eng, seng, bstate
+
+
+def batched_step_wallclock(n: int, batches, *, edit_capacity: int = 4,
+                           row_capacity: int = 64, seed: int = 1,
+                           iters: int = 20, random_edits: bool = False,
+                           csv_name: str = "wallclock_jit_batched.csv",
+                           per_label: str = "per-doc"):
+    """One vmapped ``batch_apply_replaces`` step for B documents (each with
+    one edit) timed against the single-document jit step. Used by both
+    ``wallclock_jit.run_batched`` and ``batch_scaling.run_jit_batched``.
+    Returns (t_single_seconds, rows of (b, step_ms, per_ms, rel_single))."""
+    import jax.numpy as jnp
+
+    cfg, eng, seng, bstate = make_batched_jit_setup(
+        n, max(batches), edit_capacity=edit_capacity,
+        row_capacity=row_capacity, seed=seed)
+    rng = np.random.default_rng(seed)
+    pad = [-1] * (edit_capacity - 1)
+    zeros = [0] * (edit_capacity - 1)
+    ep1 = jnp.asarray([n // 2] + pad, jnp.int32)
+    et1 = jnp.asarray([7] + zeros, jnp.int32)
+    s1 = jax.tree.map(lambda x: x[0], bstate)
+    t_single = timeit(
+        lambda: jax.block_until_ready(seng.apply_replaces(s1, ep1, et1)), iters)
+    print(f"  single-doc jit step (n={n}): {t_single*1e3:.2f}ms")
+    rows = []
+    for b in batches:
+        sb = jax.tree.map(lambda x: x[:b], bstate)
+        if random_edits:  # one distinct edit per document
+            ep = jnp.asarray(np.stack(
+                [[int(rng.integers(n))] + pad for _ in range(b)]), jnp.int32)
+            et = jnp.asarray(np.stack(
+                [[int(rng.integers(cfg.vocab))] + zeros for _ in range(b)]),
+                jnp.int32)
+        else:
+            ep, et = jnp.tile(ep1, (b, 1)), jnp.tile(et1, (b, 1))
+        t_b = timeit(
+            lambda: jax.block_until_ready(eng.batch_apply_replaces(sb, ep, et)),
+            iters)
+        per = t_b / b
+        rows.append((b, round(t_b * 1e3, 3), round(per * 1e3, 3),
+                     round(per / t_single, 3)))
+        print(f"  b={b:3d}: batched step {t_b*1e3:7.2f}ms  "
+              f"{per_label} {per*1e3:6.2f}ms  ({per/t_single:5.2f}x "
+              f"single-doc step)")
+    write_csv(f"{ensure_results()}/{csv_name}",
+              ["batch", "step_ms", f"{per_label.replace('-', '_')}_ms",
+               "rel_single_step"], rows)
+    return t_single, rows
+
+
 def write_csv(path: str, header: list[str], rows: list[tuple]) -> None:
     with open(path, "w") as f:
         f.write(",".join(header) + "\n")

@@ -49,6 +49,12 @@ def main():
                              max_batch=16 if args.full else 8)
     print(f"batch_scaling,b={rows[-1][0]},compressed={rows[-1][1]},dense={rows[-1][2]}")
 
+    print(f"\n=== Batched jit serving: per-edit wall-clock ({time.time()-t0:.0f}s) ===")
+    _, jrows = batch_scaling.run_jit_batched(
+        doc_len=512 if args.full else 256,
+        batches=(1, 4, 8, 16) if args.full else (1, 8))
+    print(f"batch_scaling_jit,b={jrows[-1][0]},rel_single_step={jrows[-1][3]}")
+
     print(f"\n=== Wall-clock: static-bucket jit engine ({time.time()-t0:.0f}s) ===")
     from benchmarks import wallclock_jit
 

@@ -2,19 +2,24 @@
 
 The paper reports *theoretical* op reductions; this measures real time for
 the TPU-servable jit path (`repro.serving.jit_engine`) on the current
-backend: full_forward vs one bucketed replace-edit step.
+backend: full_forward vs one bucketed replace-edit step — plus the batched
+serving path (`repro.serving.batch_engine`): one vmapped step serving B
+documents' edit buckets at once, reported as per-document time against the
+single-document step.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import ensure_results, write_csv
+from benchmarks.common import (
+    batched_step_wallclock, ensure_results, timeit, write_csv,
+)
 from repro.configs.vq_opt_125m import smoke_config
+from repro.core.positional import spread_positions
 from repro.models import transformer as T
 from repro.serving.jit_engine import JitIncrementalEngine
 
@@ -27,22 +32,15 @@ def run(lengths=(256, 512, 1024), edit_capacity=4, row_capacity=64, seed=1):
         eng = JitIncrementalEngine(params, cfg, edit_capacity=edit_capacity,
                                    row_capacity=row_capacity)
         tokens = jnp.asarray(np.random.default_rng(0).integers(0, cfg.vocab, n))
-        positions = jnp.arange(n) * 3
+        positions = jnp.asarray(spread_positions(n, cfg.pos_pool))
         st = eng.full_forward(tokens, positions)
         jax.block_until_ready(st)
-        t0 = time.perf_counter()
-        for _ in range(5):
-            jax.block_until_ready(eng.full_forward(tokens, positions))
-        t_full = (time.perf_counter() - t0) / 5
+        t_full = timeit(
+            lambda: jax.block_until_ready(eng.full_forward(tokens, positions)), 5)
         ep = jnp.asarray([10] + [-1] * (edit_capacity - 1), jnp.int32)
         et = jnp.asarray([5] + [0] * (edit_capacity - 1), jnp.int32)
-        st2, _ = eng.apply_replaces(st, ep, et)
-        jax.block_until_ready(st2)
-        t0 = time.perf_counter()
-        for _ in range(20):
-            st2, _ = eng.apply_replaces(st, ep, et)
-            jax.block_until_ready(st2)
-        t_inc = (time.perf_counter() - t0) / 20
+        t_inc = timeit(
+            lambda: jax.block_until_ready(eng.apply_replaces(st, ep, et)), 20)
         rows.append((n, round(t_full * 1e3, 2), round(t_inc * 1e3, 2),
                      round(t_full / t_inc, 2)))
         print(f"  n={n:5d}: full {t_full*1e3:7.1f}ms  incr {t_inc*1e3:7.1f}ms "
@@ -52,11 +50,27 @@ def run(lengths=(256, 512, 1024), edit_capacity=4, row_capacity=64, seed=1):
     return rows
 
 
+def run_batched(n=256, batches=(1, 2, 4, 8, 16), edit_capacity=4,
+                row_capacity=64, seed=1):
+    """Batched jit path: one vmapped step for B documents vs B single-doc
+    steps. per_doc_ms = t(batched step)/B; ratio < 1 means batching wins."""
+    return batched_step_wallclock(
+        n, batches, edit_capacity=edit_capacity, row_capacity=row_capacity,
+        seed=seed, csv_name="wallclock_jit_batched.csv", per_label="per-doc")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--lengths", type=int, nargs="+", default=[256, 512, 1024])
+    ap.add_argument("--batched-n", type=int, default=256)
+    ap.add_argument("--batches", type=int, nargs="+", default=[1, 2, 4, 8, 16])
+    ap.add_argument("--skip-single", action="store_true")
     args = ap.parse_args()
-    run(tuple(args.lengths))
+    if not args.skip_single:
+        print("single-document jit engine:")
+        run(tuple(args.lengths))
+    print("batched jit engine (vmapped step):")
+    run_batched(args.batched_n, tuple(args.batches))
 
 
 if __name__ == "__main__":

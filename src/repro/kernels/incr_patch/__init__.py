@@ -1,2 +1,2 @@
-from repro.kernels.incr_patch.ops import incr_patch
+from repro.kernels.incr_patch.ops import incr_patch, incr_patch_batched
 from repro.kernels.incr_patch.ref import incr_patch_ref

@@ -88,3 +88,50 @@ def incr_patch_kernel(
         interpret=interpret,
     )(q, k_new, k_old, vc_new, vc_old, mask)
     return out[:R]
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def incr_patch_kernel_batched(
+    q: jax.Array,  # [B, R, H, dh] per-document gathered rows-to-patch
+    k_new: jax.Array,  # [B, H, C, dh]
+    k_old: jax.Array,  # [B, H, C, dh]
+    vc_new: jax.Array,  # [B, H, C, Q]
+    vc_old: jax.Array,  # [B, H, C, Q]
+    mask: jax.Array,  # [B, R, C]
+    *,
+    block_r: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Batched-serving variant: the same column-patch kernel body over a grid
+    with a leading *batch* dimension — one (document, row-block, head) cell
+    per grid point, so B documents' dirty-slot patches run as one
+    ``pallas_call``. Returns ΔT [B, R, H, Q] f32."""
+    B, R, H, dh = q.shape
+    C = k_new.shape[2]
+    Q = vc_new.shape[-1]
+    scale = dh ** -0.5
+    pad = (-R) % block_r
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad), (0, 0)))
+    Rp = R + pad
+    grid = (B, Rp // block_r, H)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            # None squeezes the batch dim so the unbatched kernel body is
+            # reused verbatim — the batch lives purely in the grid.
+            pl.BlockSpec((None, block_r, 1, dh), lambda b, i, h: (b, i, h, 0)),
+            pl.BlockSpec((None, 1, C, dh), lambda b, i, h: (b, h, 0, 0)),
+            pl.BlockSpec((None, 1, C, dh), lambda b, i, h: (b, h, 0, 0)),
+            pl.BlockSpec((None, 1, C, Q), lambda b, i, h: (b, h, 0, 0)),
+            pl.BlockSpec((None, 1, C, Q), lambda b, i, h: (b, h, 0, 0)),
+            pl.BlockSpec((None, block_r, C), lambda b, i, h: (b, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_r, 1, Q),
+                               lambda b, i, h: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Rp, H, Q), jnp.float32),
+        interpret=interpret,
+    )(q, k_new, k_old, vc_new, vc_old, mask)
+    return out[:, :R]

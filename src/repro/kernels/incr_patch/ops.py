@@ -33,3 +33,23 @@ def incr_patch(q, k_new, k_old, vc_new, vc_old, mask, *, block_r: int = 128):
         q, k_new, k_old, vc_new, vc_old, mask.astype(jnp.float32),
         block_r=block_r, interpret=not _on_tpu(),
     )
+
+
+def incr_patch_batched(q, k_new, k_old, vc_new, vc_old, mask, *,
+                       block_r: int = 128):
+    """Batched serving: every argument gains a leading document axis
+    (q: [B, R, H, dh]; k_*: [B, H, C, dh]; vc_*: [B, H, C, Q];
+    mask: [B, R, C]) and the kernel grid gains a batch dimension.
+    Returns ΔT [B, R, H, Q] f32.
+
+    This is the *direct* entry point for callers that already hold stacked
+    per-document buffers (TPU serving loops built without vmap). The vmapped
+    engine route (``BatchedJitEngine`` with ``use_patch_kernel=True``)
+    reaches the same batched grid through the pallas batching rule applied
+    to the unbatched ``incr_patch``; both are parity-tested per document."""
+    from repro.kernels.incr_patch.incr_patch import incr_patch_kernel_batched
+
+    return incr_patch_kernel_batched(
+        q, k_new, k_old, vc_new, vc_old, mask.astype(jnp.float32),
+        block_r=block_r, interpret=not _on_tpu(),
+    )

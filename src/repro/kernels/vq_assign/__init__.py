@@ -1,2 +1,2 @@
-from repro.kernels.vq_assign.ops import vq_assign
+from repro.kernels.vq_assign.ops import vq_assign, vq_assign_batched
 from repro.kernels.vq_assign.ref import vq_assign_ref

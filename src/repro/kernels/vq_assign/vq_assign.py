@@ -77,3 +77,47 @@ def vq_assign_kernel(
         interpret=interpret,
     )(xh, codebook, bias)
     return idx[:N], xq[:N]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def vq_assign_kernel_batched(
+    xh: jax.Array,  # [B, N, hq, dv] per-document tokens split by vq head
+    codebook: jax.Array,  # [hq, Q, dv] (shared across the batch)
+    *,
+    block_n: int = 256,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Batched-serving variant: same assignment kernel body over a grid with
+    a leading *batch* dimension (one (document, token-block, vq-head) cell
+    per grid point). The codebook block is batch-invariant, so it stays
+    resident in VMEM across the batch axis.
+    Returns (idx [B, N, hq] int32, xq [B, N, hq, dv])."""
+    B, N, hq, dv = xh.shape
+    Q = codebook.shape[1]
+    bias = -0.5 * jnp.sum(codebook.astype(jnp.float32) ** 2, axis=-1)  # [hq, Q]
+    pad = (-N) % block_n
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Np = N + pad
+    grid = (B, Np // block_n, hq)
+    idx, xq = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            # None squeezes the batch dim: the unbatched kernel body is
+            # reused verbatim, the batch lives purely in the grid.
+            pl.BlockSpec((None, block_n, 1, dv), lambda b, i, h: (b, i, h, 0)),
+            pl.BlockSpec((1, Q, dv), lambda b, i, h: (h, 0, 0)),
+            pl.BlockSpec((1, Q), lambda b, i, h: (h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, block_n, 1), lambda b, i, h: (b, i, h)),
+            pl.BlockSpec((None, block_n, 1, dv), lambda b, i, h: (b, i, h, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Np, hq), jnp.int32),
+            jax.ShapeDtypeStruct((B, Np, hq, dv), xh.dtype),
+        ],
+        interpret=interpret,
+    )(xh, codebook, bias)
+    return idx[:, :N], xq[:, :N]

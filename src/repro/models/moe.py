@@ -32,6 +32,18 @@ from repro.distributed.context import get_ctx
 from repro.models.ffn import ffn_apply, ffn_init
 
 
+def _shard_map(f, *, mesh, in_specs, out_specs):
+    """jax.shard_map appeared (with check_vma) in newer jax; older releases
+    ship it as jax.experimental.shard_map (with check_rep)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
 def moe_init(key: jax.Array, cfg: ArchConfig, dtype=jnp.float32) -> dict:
     e = cfg.moe
     d = cfg.d_model
@@ -172,12 +184,11 @@ def moe_apply_ep(params: dict, cfg: ArchConfig, x: jax.Array) -> tuple[jax.Array
             aux = jax.lax.pmean(aux, ax)
         return y.reshape(b_loc, n, d), aux
 
-    y, aux = jax.shard_map(
+    y, aux = _shard_map(
         local_moe,
         mesh=mesh,
         in_specs=(param_specs, tok_spec),
         out_specs=(tok_spec, P()),
-        check_vma=False,
     )({k: params[k] for k in param_specs}, x)
     return y, aux
 

@@ -1,2 +1,7 @@
 from repro.serving.engine import IncrementalServer, ServerStats
 from repro.serving.decode import make_serve_step
+from repro.serving.jit_engine import JitIncrementalEngine, JitState
+from repro.serving.batch_engine import (
+    BatchedJitEngine, BatchedJitState, stack_states, unstack_state,
+)
+from repro.serving.batch_server import BatchServer, BatchStats, next_pow2

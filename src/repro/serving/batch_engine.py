@@ -1,0 +1,82 @@
+"""Batched dirty-slot serving: the vmapped static-capacity jit engine.
+
+``JitIncrementalEngine`` serves ONE document per dispatch. Under real
+traffic (the ROADMAP's millions-of-users setting) many documents have
+pending edits at once, and each bucketed step is a small fixed-shape
+program — exactly the shape regime where batching pays. This module vmaps
+the engine's un-jitted ``*_impl`` methods over a leading document axis:
+
+* ``BatchedJitState`` — the same ``JitState`` NamedTuple, every leaf with a
+  leading ``[B]`` batch axis (``stack_states`` / ``unstack_state`` convert);
+* ``batch_full_forward(tokens [B, n], positions [B, n])`` — one fused
+  program ingests B documents;
+* ``batch_apply_replaces(state, edit_pos [B, C], edit_tok [B, C])`` — one
+  fused step applies up to C replace-edits to EACH of B documents and
+  returns a per-document ``overflow [B]`` bool vector. Documents in the
+  batch may have disjoint edit buckets (pad unused slots with -1) —
+  including all-empty buckets, which leave that document unchanged.
+
+All documents in a batch must share the capacities ``(n, C, R)`` — the
+batch server's capacity buckets guarantee this. With
+``use_patch_kernel=True`` the per-layer column patch runs through the
+``incr_patch`` Pallas kernel; under vmap its grid gains a leading batch
+dimension (one ``(doc, row-block, head)`` cell per grid point), so the
+batched step reuses the same kernel as single-document serving.
+
+Exactness: slice b of every batched result equals the single-document
+engine run on document b (tested in tests/test_batch_serving.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.serving.jit_engine import JitIncrementalEngine, JitState
+
+# A JitState whose every leaf carries a leading [B] document axis.
+BatchedJitState = JitState
+
+
+def stack_states(states: list[JitState]) -> BatchedJitState:
+    """Stack per-document states along a new leading batch axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+
+def unstack_state(batched: BatchedJitState, b: int) -> JitState:
+    """Slice document ``b`` back out of a batched state."""
+    return jax.tree.map(lambda x: x[b], batched)
+
+
+class BatchedJitEngine(JitIncrementalEngine):
+    """vmap'd ``JitIncrementalEngine``: one fixed-shape step, B documents.
+
+    Same constructor as the single-document engine (``edit_capacity``,
+    ``row_capacity``, ``use_patch_kernel``, ``_weights``).
+    """
+
+    # ------------------------------------------------------------ batched API
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def batch_full_forward(self, tokens: jax.Array,
+                           positions: jax.Array) -> BatchedJitState:
+        """tokens/positions: [B, n] int32 → stacked state, leaves [B, ...]."""
+        return jax.vmap(self._full_forward_impl)(tokens, positions)
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def batch_apply_replaces(
+        self, state: BatchedJitState, edit_pos: jax.Array, edit_tok: jax.Array,
+    ) -> tuple[BatchedJitState, jax.Array]:
+        """edit_pos/edit_tok: [B, C] int32 (pad unused slots with -1).
+        Returns (new_state, overflow [B] bool). A document whose overflow
+        flag is set exceeded its row bucket R at some layer; its slice is
+        UNRELIABLE and the caller must re-run a full forward for it (the
+        batch server's fallback + capacity-doubling policy)."""
+        return jax.vmap(self._apply_replaces_impl)(state, edit_pos, edit_tok)
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def batch_logits_at(self, state: BatchedJitState,
+                        index: jax.Array) -> jax.Array:
+        """index: [B] int32 per-document row (n_real − 1 for padded docs)."""
+        return jax.vmap(self._logits_at_impl)(state, index)

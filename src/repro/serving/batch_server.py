@@ -1,0 +1,318 @@
+"""Multi-document request scheduler over the batched jit engine.
+
+The serving model (ROADMAP north star: heavy concurrent traffic):
+
+1. clients ``open_document`` (or ``open_documents`` for a fleet) — each
+   token buffer is padded up to a power-of-two length bucket ``n_cap``;
+   same-bucket documents ingest together through a batched full forward;
+2. clients ``submit_replace`` edits, which queue per-document (FIFO);
+3. ``step()`` runs ONE scheduling round: documents with pending edits are
+   grouped into **capacity buckets** keyed by ``(n_cap, C, R)`` — all shape
+   parameters of the jitted step — each group is chunked to ``max_batch``
+   documents, each document contributes up to ``C`` queued edits (conflicting
+   writes to the same position stay queued for the next round, preserving
+   submission order), and one fixed-shape ``batch_apply_replaces`` dispatch
+   serves the whole chunk;
+4. a document whose per-doc overflow flag trips gets a full-forward
+   **fallback** (its batched slice is discarded) and its row capacity ``R``
+   doubles — capped at ``n_cap``, at which point overflow is impossible —
+   moving it to a bigger bucket whose first dispatch re-jits (the classic
+   capacity-doubling / re-jit serving policy).
+
+Scheduler invariants (property-tested in tests/test_batch_scheduler.py):
+every submitted edit is applied exactly once; all bucket capacities
+(``n_cap``, ``C``, ``R``) are powers of two; per-document FIFO submission
+order is preserved, so final token buffers equal the edit-replayed
+reference under any interleaving of submits and flushes.
+
+Padding correctness: pad rows sit AFTER every real row, so under causal
+attention they never influence a real row; their own (garbage) activations
+are maintained but unread. They can consume propagation slots, which only
+makes overflow conservative, never wrong.
+
+Known cost: each dispatch stacks members' full ``JitState`` into a batched
+pytree and unstacks the result — O(total state size) copies per round, not
+O(C). A persistent per-bucket arena (documents resident in stacked arrays,
+edits scattered in place) would remove the copies; measured step-only
+timings live in ``benchmarks/batch_scaling.run_jit_batched``.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.positional import spread_positions
+from repro.serving.batch_engine import (
+    BatchedJitEngine, stack_states, unstack_state,
+)
+from repro.serving.jit_engine import JitState
+
+
+def next_pow2(n: int, minimum: int = 1) -> int:
+    c = max(int(minimum), 1)
+    while c < n:
+        c *= 2
+    return c
+
+
+@dataclass
+class BatchStats:
+    docs: int = 0
+    edits_submitted: int = 0
+    edits_applied: int = 0
+    batch_steps: int = 0  # batched dispatches issued
+    batched_docs: int = 0  # sum of dispatch group sizes
+    overflows: int = 0
+    full_forwards: int = 0  # ingests + overflow fallbacks
+    rejits: int = 0  # distinct dispatch shapes traced
+
+    @property
+    def mean_batch(self) -> float:
+        return self.batched_docs / max(self.batch_steps, 1)
+
+
+@dataclass
+class _BatchDoc:
+    doc_id: str
+    tokens: np.ndarray  # [n_cap] int32, host-side source of truth
+    n: int  # real length (rows n..n_cap-1 are padding)
+    n_cap: int
+    row_capacity: int  # per-document R; doubles on overflow
+    positions: np.ndarray  # [n_cap] int32
+    state: JitState  # device state at padded shape
+    pending: deque = field(default_factory=deque)  # FIFO of (pos, tok)
+
+
+class BatchServer:
+    """Replace-edit serving for many documents over one vmapped jit engine."""
+
+    def __init__(self, params: dict, cfg: ArchConfig, *, edit_capacity: int = 8,
+                 row_capacity: int = 64, max_batch: int = 8,
+                 min_doc_capacity: int = 16, use_patch_kernel: bool = False,
+                 pos_pool: Optional[int] = None):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.cfg = cfg
+        self.C = next_pow2(edit_capacity)
+        self.R = next_pow2(row_capacity)
+        self.max_batch = max_batch
+        self.min_doc_capacity = next_pow2(min_doc_capacity)
+        self.use_patch_kernel = use_patch_kernel
+        self.pos_pool = pos_pool or (cfg.pos_pool if cfg.pos_pool else cfg.max_seq)
+        base = BatchedJitEngine(params, cfg, edit_capacity=self.C,
+                                row_capacity=self.R,
+                                use_patch_kernel=use_patch_kernel)
+        self._weights = base.weights
+        self._engines: dict[tuple[int, int], BatchedJitEngine] = {
+            (self.C, self.R): base}
+        self._shapes_seen: set = set()
+        self.docs: dict[str, _BatchDoc] = {}
+        self.stats = BatchStats()
+
+    # ------------------------------------------------------------- engines
+
+    def engine(self, edit_capacity: int, row_capacity: int) -> BatchedJitEngine:
+        """The per-capacity-bucket engine (cached; shares weight stacks)."""
+        key = (edit_capacity, row_capacity)
+        if key not in self._engines:
+            self._engines[key] = BatchedJitEngine(
+                {}, self.cfg, edit_capacity=edit_capacity,
+                row_capacity=row_capacity,
+                use_patch_kernel=self.use_patch_kernel, _weights=self._weights)
+        return self._engines[key]
+
+    def _count_shape(self, shape: tuple) -> None:
+        if shape not in self._shapes_seen:
+            self._shapes_seen.add(shape)
+            self.stats.rejits += 1
+
+    def _padded_batch(self, chunk_len: int) -> int:
+        """Dispatch batch sizes are padded up to a power of two (capped at
+        ``max_batch``) so each capacity bucket compiles O(log max_batch)
+        shapes instead of one per observed group size."""
+        return min(next_pow2(chunk_len), self.max_batch)
+
+    # ------------------------------------------------------------- documents
+
+    def open_document(self, doc_id: str, tokens: Sequence[int]) -> None:
+        self.open_documents({doc_id: tokens})
+
+    def open_documents(self, items: dict) -> None:
+        """Ingest a fleet at once: documents sharing a length bucket are run
+        through ONE ``batch_full_forward`` dispatch (chunked like edits)."""
+        prepared = []
+        for doc_id, tokens in items.items():
+            if doc_id in self.docs:
+                raise KeyError(f"document {doc_id!r} already open")
+            n = len(tokens)
+            if n < 1:
+                raise ValueError("empty document")
+            n_cap = next_pow2(n, self.min_doc_capacity)
+            padded = np.zeros(n_cap, np.int32)
+            padded[:n] = np.asarray(tokens, np.int32)
+            positions = spread_positions(n_cap, self.pos_pool).astype(np.int32)
+            prepared.append((doc_id, padded, n, n_cap, positions))
+        eng = self.engine(self.C, self.R)
+        groups: dict[int, list] = {}
+        for p in prepared:
+            groups.setdefault(p[3], []).append(p)
+        for n_cap, members in sorted(groups.items()):
+            for lo in range(0, len(members), self.max_batch):
+                chunk = members[lo:lo + self.max_batch]
+                B_pad = self._padded_batch(len(chunk))
+                toks = np.stack([c[1] for c in chunk]
+                                + [chunk[0][1]] * (B_pad - len(chunk)))
+                poss = np.stack([c[4] for c in chunk]
+                                + [chunk[0][4]] * (B_pad - len(chunk)))
+                bstate = eng.batch_full_forward(jnp.asarray(toks),
+                                                jnp.asarray(poss))
+                self._count_shape(("full", B_pad, n_cap))
+                for b, (doc_id, padded, n, n_cap, positions) in enumerate(chunk):
+                    self.docs[doc_id] = _BatchDoc(
+                        doc_id=doc_id, tokens=padded, n=n, n_cap=n_cap,
+                        row_capacity=min(self.R, n_cap), positions=positions,
+                        state=unstack_state(bstate, b))
+                    self.stats.docs += 1
+                    self.stats.full_forwards += 1
+
+    def submit_replace(self, doc_id: str, pos: int, tok: int) -> None:
+        doc = self.docs[doc_id]
+        if not 0 <= pos < doc.n:
+            raise IndexError(f"pos {pos} out of range for doc of length {doc.n}")
+        if not 0 <= tok < self.cfg.vocab:
+            raise ValueError(f"token {tok} outside vocab of {self.cfg.vocab}")
+        doc.pending.append((int(pos), int(tok)))
+        self.stats.edits_submitted += 1
+
+    def pending_count(self) -> int:
+        return sum(len(d.pending) for d in self.docs.values())
+
+    # ------------------------------------------------------------- scheduling
+
+    def _take_bucket(self, doc: _BatchDoc) -> tuple[np.ndarray, np.ndarray]:
+        """Pop up to C pending edits into a padded (-1) edit bucket. A second
+        write to a position already in this bucket stays queued — buckets
+        scatter, and only distinct positions keep last-writer order exact.
+        Edits to other positions commute with the deferred write, so they
+        still ship this round; per-position FIFO order is what matters."""
+        edit_pos = np.full(self.C, -1, np.int32)
+        edit_tok = np.zeros(self.C, np.int32)
+        taken: set[int] = set()
+        kept = deque()
+        i = 0
+        while doc.pending and i < self.C:
+            pos, tok = doc.pending.popleft()
+            if pos in taken:
+                kept.append((pos, tok))  # conflicts queue for the next round,
+                continue                 # in submission order
+            taken.add(pos)
+            edit_pos[i] = pos
+            edit_tok[i] = tok
+            i += 1
+        # unscanned edits were submitted after every kept one; append them
+        kept.extend(doc.pending)
+        doc.pending.clear()
+        doc.pending.extend(kept)
+        return edit_pos, edit_tok
+
+    def step(self) -> int:
+        """One scheduling round; returns the number of edits applied."""
+        ready = [d for d in self.docs.values() if d.pending]
+        if not ready:
+            return 0
+        groups: dict[tuple[int, int, int], list[_BatchDoc]] = {}
+        for d in ready:
+            groups.setdefault((d.n_cap, self.C, d.row_capacity), []).append(d)
+        applied = 0
+        for (n_cap, C, R), members in sorted(groups.items()):
+            for lo in range(0, len(members), self.max_batch):
+                applied += self._dispatch(members[lo:lo + self.max_batch],
+                                          n_cap, C, R)
+        return applied
+
+    def flush(self) -> int:
+        """Drain every queue; returns total edits applied."""
+        total = 0
+        while self.pending_count():
+            total += self.step()
+        return total
+
+    def _dispatch(self, chunk: list[_BatchDoc], n_cap: int, C: int,
+                  R: int) -> int:
+        eng = self.engine(C, R)
+        buckets = [self._take_bucket(d) for d in chunk]
+        states = [d.state for d in chunk]
+        # pad to a pow2 batch with copies of doc 0 carrying empty edit
+        # buckets (all -1): a no-op slice whose output is discarded
+        B_pad = self._padded_batch(len(chunk))
+        padded = buckets + [(np.full(C, -1, np.int32), np.zeros(C, np.int32))
+                            ] * (B_pad - len(chunk))
+        states += [states[0]] * (B_pad - len(chunk))
+        edit_pos = jnp.asarray(np.stack([b[0] for b in padded]))
+        edit_tok = jnp.asarray(np.stack([b[1] for b in padded]))
+        batched = stack_states(states)
+        try:
+            new_state, overflow = eng.batch_apply_replaces(batched, edit_pos,
+                                                           edit_tok)
+            overflow = np.asarray(overflow)
+        except Exception:
+            # a failed dispatch (OOM, interrupt) must not lose edits: put
+            # each taken bucket back at the FRONT of its queue, in order
+            for doc, (ep, et) in zip(chunk, buckets):
+                doc.pending.extendleft(
+                    (int(p), int(t)) for p, t in zip(ep[::-1], et[::-1])
+                    if p >= 0)
+            raise
+        self.stats.batch_steps += 1
+        self.stats.batched_docs += len(chunk)
+        self._count_shape(("edit", B_pad, n_cap, C, R))
+        applied = 0
+        for b, doc in enumerate(chunk):
+            ep, et = buckets[b]
+            n_edits = int((ep >= 0).sum())
+            applied += n_edits
+            self.stats.edits_applied += n_edits
+            doc.tokens[ep[ep >= 0]] = et[ep >= 0]
+            if overflow[b]:
+                self._fallback_full_forward(doc)
+            else:
+                doc.state = unstack_state(new_state, b)
+        return applied
+
+    def _fallback_full_forward(self, doc: _BatchDoc) -> None:
+        """Overflow: discard the unreliable batched slice, recompute from the
+        host token buffer, and double the document's row bucket."""
+        self.stats.overflows += 1
+        eng = self.engine(self.C, self.R)
+        doc.state = eng.full_forward(jnp.asarray(doc.tokens),
+                                     jnp.asarray(doc.positions))
+        self.stats.full_forwards += 1
+        self._count_shape(("full", doc.n_cap))
+        if doc.row_capacity < doc.n_cap:
+            doc.row_capacity = min(doc.row_capacity * 2, doc.n_cap)
+
+    # ------------------------------------------------------------- outputs
+
+    def _flushed(self, doc_id: str) -> _BatchDoc:
+        doc = self.docs[doc_id]
+        if doc.pending:
+            raise RuntimeError(
+                f"document {doc_id!r} has {len(doc.pending)} unflushed edits")
+        return doc
+
+    def tokens(self, doc_id: str) -> np.ndarray:
+        doc = self._flushed(doc_id)
+        return doc.tokens[:doc.n].copy()
+
+    def state(self, doc_id: str) -> JitState:
+        return self._flushed(doc_id).state
+
+    def logits(self, doc_id: str) -> np.ndarray:
+        doc = self._flushed(doc_id)
+        eng = self.engine(self.C, self.R)
+        return np.asarray(eng.logits_at(doc.state, jnp.int32(doc.n - 1)))

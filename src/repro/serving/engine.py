@@ -9,6 +9,18 @@ Wraps ``repro.core.incremental.IncrementalEngine`` with:
 * an offline batch path: align a new revision against the cached base with
   an edit script and apply it (replaces batched, inserts/deletes in order);
 * op accounting per request, for the Table-2 / Fig-3/4 experiments.
+
+Batched serving
+---------------
+This server is the *op-counting* single-worker deployment: one NumPy engine,
+one document per request, dynamic shapes. The wall-clock, multi-tenant
+deployment lives in ``repro.serving.batch_server.BatchServer``: documents are
+padded into power-of-two capacity buckets ``(n_cap, C, R)``, pending
+replace-edits from different documents are grouped per bucket and served by
+ONE vmapped fixed-shape jit step (``batch_engine.BatchedJitEngine``), and a
+per-document overflow flag triggers a full-forward fallback plus
+capacity-doubling (R ← min(2R, n_cap)) re-jit. Use this class to *measure*
+the paper's op claims; use ``BatchServer`` to *serve traffic*.
 """
 from __future__ import annotations
 

@@ -24,6 +24,19 @@ State layout (per document, all jnp, layer-stacked where possible):
 
 Exactness: identical codes / float-tolerance states vs the NumPy engine
 (tested in tests/test_jit_engine.py).
+
+Batched serving
+---------------
+Because every step is a fixed-shape pure function of ``(JitState, edit
+bucket)``, a fleet of documents that share the same capacities ``(n, C, R)``
+can be served as ONE vmapped step: stack their states along a leading batch
+axis and vmap ``_full_forward_impl`` / ``_apply_replaces_impl``
+(``repro.serving.batch_engine.BatchedJitEngine``). Overflow is reported
+per-document — the scheduler (``repro.serving.batch_server.BatchServer``)
+re-runs only the overflowed documents with a full forward and doubles their
+row capacity ``R`` (a re-jit, amortized over the fleet). The un-jitted
+``*_impl`` methods exist precisely so the batched engine can wrap them in
+``jit(vmap(...))`` without nesting jit caches.
 """
 from __future__ import annotations
 
@@ -98,17 +111,35 @@ class JitIncrementalEngine:
     """Static-capacity incremental engine for VQT replace-edits."""
 
     def __init__(self, params: dict, cfg: ArchConfig, *, edit_capacity: int = 8,
-                 row_capacity: int = 64):
+                 row_capacity: int = 64, use_patch_kernel: bool = False,
+                 _weights=None):
         self.cfg = cfg
         self.C = edit_capacity
         self.R = row_capacity
-        self.W, self.extras, self.meta = _weights_from_params(params, cfg)
+        # Route the column patch through the incr_patch Pallas kernel instead
+        # of the inline einsum (same math; the kernel adds a batch grid
+        # dimension under vmap — see batch_engine.py).
+        self.use_patch_kernel = use_patch_kernel
+        if _weights is not None:
+            self.W, self.extras, self.meta = _weights
+        else:
+            self.W, self.extras, self.meta = _weights_from_params(params, cfg)
         self.L = self.W["wq"].shape[0]
+
+    @property
+    def weights(self):
+        """(W, extras, meta) — pass as ``_weights=`` to share the extracted
+        parameter stacks between sibling engines (e.g. per-capacity-bucket
+        re-jits in the batch server)."""
+        return self.W, self.extras, self.meta
 
     # ------------------------------------------------------------ full pass
 
     @functools.partial(jax.jit, static_argnums=0)
     def full_forward(self, tokens: jax.Array, positions: jax.Array) -> JitState:
+        return self._full_forward_impl(tokens, positions)
+
+    def _full_forward_impl(self, tokens: jax.Array, positions: jax.Array) -> JitState:
         m = self.meta
         n = tokens.shape[0]
         x0 = self.extras["tok_emb"][tokens] + self.extras["pos_emb"][positions]
@@ -156,6 +187,10 @@ class JitIncrementalEngine:
         Returns (new_state, overflow) — overflow=True means the propagation
         bucket R was exceeded at some layer and the result is UNRELIABLE
         (caller must full_forward)."""
+        return self._apply_replaces_impl(state, edit_pos, edit_tok)
+
+    def _apply_replaces_impl(self, state: JitState, edit_pos: jax.Array,
+                             edit_tok: jax.Array) -> tuple[JitState, jax.Array]:
         m = self.meta
         C, R = self.C, self.R
         n = state.tokens.shape[0]
@@ -206,11 +241,23 @@ class JitIncrementalEngine:
                 vmask[None, :]
                 & (dirty_idx[None, :] <= jnp.arange(n)[:, None])
             ).astype(jnp.float32)  # [n, Cd]
-            s_new = jnp.einsum("nhe,che->nhc", state.q[li], k_all[dirty_idx]) * m["scale"]
-            s_old = jnp.einsum("nhe,che->nhc", state.q[li], k_old) * m["scale"]
-            dT = jnp.einsum("nhc,chq->nhq", _gelu(s_new) * col_mask[:, None, :],
-                            vc_all[dirty_idx]) - jnp.einsum(
-                "nhc,chq->nhq", _gelu(s_old) * col_mask[:, None, :], vc_old)
+            if self.use_patch_kernel:
+                from repro.kernels.incr_patch import incr_patch
+
+                dT = incr_patch(
+                    state.q[li],
+                    k_all[dirty_idx].transpose(1, 0, 2),
+                    k_old.transpose(1, 0, 2),
+                    vc_all[dirty_idx].transpose(1, 0, 2),
+                    vc_old.transpose(1, 0, 2),
+                    col_mask,
+                )
+            else:
+                s_new = jnp.einsum("nhe,che->nhc", state.q[li], k_all[dirty_idx]) * m["scale"]
+                s_old = jnp.einsum("nhe,che->nhc", state.q[li], k_old) * m["scale"]
+                dT = jnp.einsum("nhc,chq->nhq", _gelu(s_new) * col_mask[:, None, :],
+                                vc_all[dirty_idx]) - jnp.einsum(
+                    "nhc,chq->nhq", _gelu(s_old) * col_mask[:, None, :], vc_old)
             T_all = state.T[li] + dT
             # dirty rows: full row recompute
             causal_rows = (jnp.arange(n)[None, :] <= dirty_idx[:, None]).astype(
@@ -261,5 +308,15 @@ class JitIncrementalEngine:
 
     @functools.partial(jax.jit, static_argnums=0)
     def logits_last(self, state: JitState) -> jax.Array:
-        h = _ln(state.x[-1][-1][None], self.extras["fn_s"], self.extras["fn_b"])[0]
+        return self._logits_at_impl(state, -1)
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def logits_at(self, state: JitState, index: jax.Array) -> jax.Array:
+        """Logits at an arbitrary row — the batched server pads documents to a
+        capacity bucket, so "last token" is ``index = n_real - 1``, not -1."""
+        return self._logits_at_impl(state, index)
+
+    def _logits_at_impl(self, state: JitState, index: jax.Array) -> jax.Array:
+        h = _ln(state.x[-1][index][None], self.extras["fn_s"],
+                self.extras["fn_b"])[0]
         return h @ self.extras["head_w"]

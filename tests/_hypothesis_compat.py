@@ -1,0 +1,88 @@
+"""Import shim: real hypothesis when installed, pytest.skip stubs otherwise.
+
+The property-based suites (`test_edits`, `test_vq`, ...) must *collect* on a
+bare interpreter — CI and the tier-1 command install the ``test`` extra, but
+a minimal environment may not have hypothesis. Test modules import
+``given`` / ``settings`` / ``st`` from here instead of from hypothesis:
+
+    from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+With hypothesis present these are the real objects. Without it, ``st.*``
+returns inert placeholder strategies and ``@given`` replaces the test body
+with ``pytest.skip``, so every module still collects and the rest of each
+suite runs.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import assume, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """Inert placeholder: supports the combinator surface used by the
+        suites (map/filter/flatmap chaining) but never draws values."""
+
+        def __init__(self, desc: str):
+            self.desc = desc
+
+        def __repr__(self) -> str:
+            return self.desc
+
+        def map(self, f):
+            return _Strategy(f"{self.desc}.map(...)")
+
+        def filter(self, f):
+            return _Strategy(f"{self.desc}.filter(...)")
+
+        def flatmap(self, f):
+            return _Strategy(f"{self.desc}.flatmap(...)")
+
+    class _StrategiesModule:
+        def __getattr__(self, name: str):
+            def make(*args, **kwargs) -> _Strategy:
+                return _Strategy(f"st.{name}(...)")
+
+            return make
+
+    st = _StrategiesModule()
+
+    def given(*strategy_args, **strategy_kwargs):
+        def decorate(fn):
+            import inspect
+
+            def skipper(*args, **kwargs):
+                pytest.skip("hypothesis not installed — pip install '.[test]'")
+
+            # Hide strategy-filled parameters from pytest's signature
+            # introspection, or it would go looking for fixtures named
+            # after them; real fixtures (e.g. module setups) stay visible.
+            # Positional strategies fill the RIGHTMOST parameters (hypothesis
+            # semantics), keyword strategies fill by name.
+            sig = inspect.signature(fn)
+            keep = [p for name, p in sig.parameters.items()
+                    if name not in strategy_kwargs]
+            if strategy_args:
+                keep = keep[:-len(strategy_args)]
+            skipper.__name__ = fn.__name__
+            skipper.__qualname__ = fn.__qualname__
+            skipper.__doc__ = fn.__doc__
+            skipper.__module__ = fn.__module__
+            skipper.__signature__ = sig.replace(parameters=keep)
+            return skipper
+
+        return decorate
+
+    def settings(*_args, **_kwargs):
+        def decorate(fn):
+            return fn
+
+        return decorate
+
+    def assume(condition) -> bool:
+        return True

@@ -6,6 +6,8 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# the tests dir itself, so suites can import the _hypothesis_compat shim
+sys.path.insert(0, os.path.dirname(__file__))
 
 import jax
 

@@ -1,0 +1,188 @@
+"""Scheduler/bucketing invariants for the batch server (ISSUE 1 satellites).
+
+Three invariants, checked both property-based (hypothesis, via the
+`_hypothesis_compat` shim) and with always-run deterministic seeds:
+
+1. every submitted edit is applied exactly once;
+2. every capacity the scheduler buckets by (n_cap, C, R) is a power of two;
+3. final per-document token buffers equal the edit-replayed reference under
+   random interleavings of submits and flushes.
+
+The model here is tiny (smoke config) but real — dispatches go through the
+vmapped jit engine, so these also exercise stacking/unstacking and the
+overflow path under adversarial schedules.
+"""
+import jax
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.configs.vq_opt_125m import smoke_config
+from repro.models import transformer as T
+from repro.serving.batch_server import BatchServer
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_config(vqt=True)
+    params = jax.device_get(T.init_params(jax.random.PRNGKey(1), cfg))
+    return cfg, params
+
+
+def _is_pow2(v: int) -> bool:
+    return v >= 1 and (v & (v - 1)) == 0
+
+
+def _run_interleaving(cfg, params, seed: int, n_docs: int, n_ops: int,
+                      row_capacity: int = 16, max_batch: int = 3) -> None:
+    """Random schedule of submits and flushes; assert all three invariants."""
+    rng = np.random.default_rng(seed)
+    srv = BatchServer(params, cfg, edit_capacity=4, row_capacity=row_capacity,
+                      max_batch=max_batch, min_doc_capacity=16)
+    ref: dict[str, list[int]] = {}
+    for i in range(n_docs):
+        n = int(rng.integers(4, 36))
+        toks = rng.integers(0, cfg.vocab, n)
+        ref[f"d{i}"] = list(toks)
+        srv.open_document(f"d{i}", toks)
+    submitted = 0
+    for _ in range(n_ops):
+        if rng.random() < 0.25:
+            srv.step()  # partial flush mid-stream
+        else:
+            did = f"d{int(rng.integers(n_docs))}"
+            pos = int(rng.integers(len(ref[did])))
+            tok = int(rng.integers(cfg.vocab))
+            srv.submit_replace(did, pos, tok)
+            ref[did][pos] = tok  # replay reference, submission order
+            submitted += 1
+    srv.flush()
+
+    # invariant 1: exactly-once application
+    assert srv.pending_count() == 0
+    assert srv.stats.edits_submitted == submitted
+    assert srv.stats.edits_applied == submitted
+
+    # invariant 2: power-of-two capacities everywhere the scheduler buckets
+    assert _is_pow2(srv.C)
+    for doc in srv.docs.values():
+        assert _is_pow2(doc.n_cap) and doc.n_cap >= doc.n
+        assert _is_pow2(doc.row_capacity) and doc.row_capacity <= doc.n_cap
+    for (C, R) in srv._engines:
+        assert _is_pow2(C) and _is_pow2(R)
+
+    # invariant 3: final buffers == edit-replayed references
+    for did, toks in ref.items():
+        assert list(srv.tokens(did)) == toks, did
+
+
+# ------------------------------------------------------- deterministic seeds
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_interleaving_invariants_deterministic(setup, seed):
+    cfg, params = setup
+    _run_interleaving(cfg, params, seed=seed, n_docs=3, n_ops=30)
+
+
+def test_conflicting_writes_same_position_fifo(setup):
+    """Two queued writes to one position must land in submission order even
+    though a single scatter bucket cannot hold both."""
+    cfg, params = setup
+    srv = BatchServer(params, cfg, edit_capacity=4, row_capacity=16,
+                      min_doc_capacity=16)
+    rng = np.random.default_rng(3)
+    toks = list(rng.integers(0, cfg.vocab, 20))
+    srv.open_document("d", toks)
+    with pytest.raises(ValueError):  # host buffer and device state must
+        srv.submit_replace("d", 0, cfg.vocab)  # never see out-of-vocab tokens
+    for tok in (5, 6, 7):  # three writes, same position
+        srv.submit_replace("d", 10, tok)
+    srv.submit_replace("d", 11, 8)
+    assert srv.step() == 2  # (10,5) and the commuting (11,8) share a bucket
+    assert srv.step() == 1  # (10,6) — same-position conflicts go one per round
+    assert srv.step() == 1  # (10,7)
+    assert srv.tokens("d")[10] == 7  # last writer won
+    assert srv.tokens("d")[11] == 8
+    assert srv.stats.batch_steps == 3
+
+
+def test_capacity_overflow_doubles_to_pow2_and_converges(setup):
+    """R=1 + wide edits: doubling must converge (R caps at n_cap, where
+    overflow is impossible) and stay a power of two throughout."""
+    cfg, params = setup
+    srv = BatchServer(params, cfg, edit_capacity=4, row_capacity=1,
+                      min_doc_capacity=16)
+    rng = np.random.default_rng(4)
+    toks = list(rng.integers(0, cfg.vocab, 16))
+    srv.open_document("d", toks)
+    for i in range(8):
+        srv.submit_replace("d", i, int(rng.integers(cfg.vocab)))
+        toks[i] = srv.docs["d"].pending[-1][1]
+    srv.flush()
+    doc = srv.docs["d"]
+    assert list(srv.tokens("d")) == toks
+    assert _is_pow2(doc.row_capacity)
+    assert doc.row_capacity <= doc.n_cap
+
+
+def test_bucket_grouping_by_shape(setup):
+    """Docs of different length buckets never share a dispatch; docs of the
+    same bucket do (observable through mean batch size)."""
+    cfg, params = setup
+    srv = BatchServer(params, cfg, edit_capacity=4, row_capacity=16,
+                      max_batch=8, min_doc_capacity=16)
+    rng = np.random.default_rng(5)
+    for i, n in enumerate((10, 12, 14, 60)):  # three n_cap=16, one n_cap=64
+        srv.open_document(f"d{i}", rng.integers(0, cfg.vocab, n))
+    for i in range(4):
+        srv.submit_replace(f"d{i}", 1, 3)
+    srv.step()
+    # one dispatch for the 16-bucket trio + one for the 64-bucket doc
+    assert srv.stats.batch_steps == 2
+    assert srv.stats.batched_docs == 4
+
+
+def test_failed_dispatch_restores_queue(setup, monkeypatch):
+    """A dispatch that raises (device OOM, interrupt) must put every taken
+    edit back at the front of its queue, in submission order."""
+    cfg, params = setup
+    srv = BatchServer(params, cfg, edit_capacity=4, row_capacity=16,
+                      min_doc_capacity=16)
+    srv.open_document("d", list(range(1, 17)))
+    srv.submit_replace("d", 2, 9)
+    srv.submit_replace("d", 5, 4)
+    eng = srv.engine(srv.C, srv.docs["d"].row_capacity)
+
+    def boom(*args, **kwargs):
+        raise RuntimeError("simulated device failure")
+
+    monkeypatch.setattr(eng, "batch_apply_replaces", boom)
+    with pytest.raises(RuntimeError, match="simulated device failure"):
+        srv.step()
+    assert list(srv.docs["d"].pending) == [(2, 9), (5, 4)]
+    assert srv.stats.edits_applied == 0 and srv.stats.batch_steps == 0
+    monkeypatch.undo()
+    srv.flush()
+    toks = srv.tokens("d")
+    assert toks[2] == 9 and toks[5] == 4
+
+
+# ------------------------------------------------------------ property-based
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n_docs=st.integers(1, 4),
+       n_ops=st.integers(1, 40))
+def test_interleaving_invariants_property(setup, seed, n_docs, n_ops):
+    cfg, params = setup
+    _run_interleaving(cfg, params, seed=seed, n_docs=n_docs, n_ops=n_ops)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), row_capacity=st.sampled_from([1, 2, 4]))
+def test_tight_capacity_property(setup, seed, row_capacity):
+    """Under overflow-heavy schedules the invariants must still hold."""
+    cfg, params = setup
+    _run_interleaving(cfg, params, seed=seed, n_docs=2, n_ops=16,
+                      row_capacity=row_capacity, max_batch=2)

@@ -1,6 +1,6 @@
 """Edit-script properties (paper §3.3 / §4 alignment)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.edits import apply_edits, edit_script, random_revision
 

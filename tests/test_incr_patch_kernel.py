@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.incr_patch import incr_patch, incr_patch_ref
+from repro.kernels.incr_patch import incr_patch, incr_patch_batched, incr_patch_ref
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -28,6 +28,25 @@ def test_incr_patch_sweep(R, H, dh, C, Q, dtype):
     atol = 0.35 if dtype == jnp.bfloat16 else 1e-4
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=atol,
                                rtol=0.02)
+
+
+@pytest.mark.parametrize("B,R,H,dh,C,Q", [(2, 64, 4, 64, 8, 64), (3, 7, 2, 32, 8, 64)])
+def test_incr_patch_batched_matches_per_doc(B, R, H, dh, C, Q):
+    """The batch-grid kernel slice b == the single-doc kernel on doc b."""
+    ks = jax.random.split(jax.random.PRNGKey(B * R + C), 6)
+    q = jax.random.normal(ks[0], (B, R, H, dh))
+    k_new = jax.random.normal(ks[1], (B, H, C, dh))
+    k_old = jax.random.normal(ks[2], (B, H, C, dh))
+    vc_new = jax.random.normal(ks[3], (B, H, C, Q))
+    vc_old = jax.random.normal(ks[4], (B, H, C, Q))
+    mask = jax.random.bernoulli(ks[5], 0.7, (B, R, C))
+    out = incr_patch_batched(q, k_new, k_old, vc_new, vc_old, mask, block_r=32)
+    assert out.shape == (B, R, H, Q)
+    for b in range(B):
+        ref = incr_patch(q[b], k_new[b], k_old[b], vc_new[b], vc_old[b],
+                         mask[b], block_r=32)
+        np.testing.assert_allclose(np.asarray(out[b]), np.asarray(ref),
+                                   atol=1e-5, rtol=1e-5)
 
 
 def test_incr_patch_matches_engine_math():

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.kernels.gated_attention import gated_attention, gated_attention_ref
-from repro.kernels.vq_assign import vq_assign, vq_assign_ref
+from repro.kernels.vq_assign import vq_assign, vq_assign_batched, vq_assign_ref
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -24,6 +24,20 @@ def test_vq_assign_sweep(N, hq, Q, dv, dtype):
         np.asarray(xq_r, np.float32),
         atol=1e-2 if dtype == jnp.bfloat16 else 1e-6,
     )
+
+
+@pytest.mark.parametrize("B,N,hq,Q,dv", [(2, 64, 2, 64, 128), (3, 30, 2, 32, 64)])
+def test_vq_assign_batched_matches_per_doc(B, N, hq, Q, dv):
+    """The batch-grid kernel slice b == the single-doc kernel on doc b."""
+    x = jax.random.normal(jax.random.PRNGKey(B + N), (B, N, hq * dv))
+    cb = jax.random.normal(jax.random.PRNGKey(1), (hq, Q, dv)) * 0.5
+    idx_b, xq_b = vq_assign_batched(x, cb, block_n=32)
+    assert idx_b.shape == (B, N, hq) and xq_b.shape == (B, N, hq * dv)
+    for b in range(B):
+        idx_s, xq_s = vq_assign(x[b], cb, block_n=32)
+        np.testing.assert_array_equal(np.asarray(idx_b[b]), np.asarray(idx_s))
+        np.testing.assert_allclose(np.asarray(xq_b[b]), np.asarray(xq_s),
+                                   atol=1e-6)
 
 
 def test_vq_assign_matches_model_vq():

@@ -1,7 +1,7 @@
 """Sampled positional embeddings and the gap allocator (paper §3.3, App. B)."""
 import jax
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.positional import PositionAllocator, sample_positions, spread_positions
 

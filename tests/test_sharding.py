@@ -73,6 +73,8 @@ def test_mini_dryrun_subprocess():
                     batch_shardings(batch_sds, mesh))).lower(state_sds, batch_sds)
                 compiled = lowered.compile()
                 ca = compiled.cost_analysis()
+                if isinstance(ca, (list, tuple)):  # older jax: one per device
+                    ca = ca[0]
                 out["x".join(map(str, shape))] = float(ca.get("flops", 0))
         print(json.dumps(out))
         """

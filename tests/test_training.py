@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs.vq_opt_125m import smoke_config
 from repro.data import SyntheticCorpus, lm_batches
@@ -29,6 +30,7 @@ def test_adamw_moves_toward_minimum():
     assert float(jnp.abs(params["w"]).max()) < 0.3
 
 
+@pytest.mark.slow
 def test_train_loss_decreases():
     cfg = smoke_config(vqt=True)
     state = train_state_init(jax.random.PRNGKey(0), cfg)
@@ -44,6 +46,7 @@ def test_train_loss_decreases():
     assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.05, losses[::8]
 
 
+@pytest.mark.slow
 def test_grad_accumulation_matches_full_batch():
     cfg = smoke_config(vqt=False)
     state = train_state_init(jax.random.PRNGKey(0), cfg)
