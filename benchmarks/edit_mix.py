@@ -1,0 +1,135 @@
+"""Edit-mix benchmark: replace-only vs mixed (insert/delete-heavy) streams.
+
+Two views of the same workload, so the perf trajectory of the full edit
+algebra (ISSUE 2 tentpole) is tracked from this PR on:
+
+* **ops** — the paper's metric, metered by the NumPy ``IncrementalServer``:
+  incremental ops vs the dense recompute-from-scratch equivalent;
+* **wall-clock** — the deployment metric: total ``BatchServer.flush`` time
+  (typed fixed-shape dispatches, including any defrag/grow/overflow
+  re-ingests) per edit, plus the traced-shape count, which must stay
+  bounded by the capacity grid rather than grow with traffic.
+
+Emits ``results/BENCH_edit_mix.json`` (machine-readable, one record per
+workload) and prints name,value CSV lines like the other benchmarks.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import dense_ops_for, ensure_results
+
+MIXES = {
+    "replace_only": {"replace": 1.0, "insert": 0.0, "delete": 0.0},
+    # the paper's atomic-edit workload is structural-edit heavy (typing
+    # inserts + corrections); 40% inserts/deletes comfortably exceeds the
+    # >=30% acceptance bar
+    "mixed": {"replace": 0.6, "insert": 0.25, "delete": 0.15},
+}
+
+
+def _stream(rng, ref: list, vocab: int, mix: dict, n_edits: int):
+    """Yield (op, pos, tok) against a live reference list."""
+    ops, ps = list(mix), np.asarray([mix[k] for k in mix])
+    for _ in range(n_edits):
+        op = str(rng.choice(ops, p=ps / ps.sum()))
+        if op == "delete" and len(ref) <= 1:
+            op = "replace"
+        if op == "replace":
+            pos, tok = int(rng.integers(len(ref))), int(rng.integers(vocab))
+            ref[pos] = tok
+        elif op == "insert":
+            pos, tok = int(rng.integers(len(ref) + 1)), int(rng.integers(vocab))
+            ref.insert(pos, tok)
+        else:
+            pos, tok = int(rng.integers(len(ref))), 0
+            del ref[pos]
+        yield op, pos, tok
+
+
+def run(doc_len: int = 192, n_edits: int = 24, n_docs: int = 4,
+        seed: int = 0) -> list[dict]:
+    import jax
+
+    from repro.configs.vq_opt_125m import smoke_config
+    from repro.core.edits import Edit
+    from repro.models import transformer as T
+    from repro.serving.batch_server import BatchServer
+    from repro.serving.engine import IncrementalServer
+
+    cfg = smoke_config(vqt=True)
+    params = jax.device_get(T.init_params(jax.random.PRNGKey(seed), cfg))
+    records = []
+    for name, mix in MIXES.items():
+        rng = np.random.default_rng(seed)
+        base_docs = {f"d{i}": list(rng.integers(0, cfg.vocab, doc_len))
+                     for i in range(n_docs)}
+
+        # ---- op view (single-worker NumPy server, the paper's metric)
+        op_srv = IncrementalServer(params, cfg)
+        ops = dense = 0
+        doc_id = "d0"
+        ref = list(base_docs[doc_id])
+        op_srv.open_document(doc_id, ref)
+        for op, pos, tok in _stream(rng, ref, cfg.vocab, mix, n_edits):
+            ops += op_srv.apply_edit(doc_id, Edit(op, pos, tok))
+            dense += dense_ops_for(cfg, len(ref))
+
+        # ---- wall-clock view (batched jit server, typed buckets)
+        srv = BatchServer(params, cfg, edit_capacity=4, row_capacity=64,
+                          max_batch=n_docs, min_doc_capacity=64)
+        srv.open_documents(base_docs)
+        refs = {k: list(v) for k, v in base_docs.items()}
+        rng2 = np.random.default_rng(seed + 1)
+        submitted = 0
+        for i in range(n_edits):
+            did = f"d{int(rng2.integers(n_docs))}"
+            for op, pos, tok in _stream(rng2, refs[did], cfg.vocab, mix, 1):
+                srv.submit_edit(did, Edit(op, pos, tok))
+                submitted += 1
+        srv.flush()  # warm the dispatch shapes once
+        # measured pass: same traffic pattern again on the warm server
+        t0 = time.perf_counter()
+        for i in range(n_edits):
+            did = f"d{int(rng2.integers(n_docs))}"
+            for op, pos, tok in _stream(rng2, refs[did], cfg.vocab, mix, 1):
+                srv.submit_edit(did, Edit(op, pos, tok))
+                submitted += 1
+        srv.flush()
+        wall = time.perf_counter() - t0
+        for did, r in refs.items():
+            assert list(srv.tokens(did)) == r, did
+
+        structural = 1.0 - mix["replace"]
+        rec = {
+            "workload": name,
+            "structural_fraction": round(structural, 3),
+            "doc_len": doc_len,
+            "n_edits": n_edits,
+            "ops_incremental": int(ops),
+            "ops_dense_equiv": int(dense),
+            "ops_speedup": round(dense / max(ops, 1), 2),
+            "wall_s_per_edit": round(wall / n_edits, 5),
+            "batch_dispatches": srv.stats.batch_steps,
+            "traced_shapes": srv.stats.rejits,
+            "overflows": srv.stats.overflows,
+            "defrags": srv.stats.defrags,
+            "grows": srv.stats.grows,
+        }
+        records.append(rec)
+        print(f"edit_mix,{name},ops_speedup={rec['ops_speedup']},"
+              f"wall_per_edit_ms={rec['wall_s_per_edit']*1e3:.2f},"
+              f"traced_shapes={rec['traced_shapes']}")
+    out = os.path.join(ensure_results(), "BENCH_edit_mix.json")
+    with open(out, "w") as f:
+        json.dump(records, f, indent=2)
+    print(f"wrote {out}")
+    return records
+
+
+if __name__ == "__main__":
+    run()

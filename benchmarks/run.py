@@ -61,6 +61,13 @@ def main():
     rows = wallclock_jit.run(lengths=(256, 1024) if not args.full else (256, 1024, 2048))
     print(f"wallclock_jit,n={rows[-1][0]},speedup={rows[-1][3]}")
 
+    print(f"\n=== Edit mix: replace-only vs insert/delete-heavy "
+          f"({time.time()-t0:.0f}s) ===")
+    from benchmarks import edit_mix
+
+    edit_mix.run(doc_len=512 if args.full else 128,
+                 n_edits=64 if args.full else 16)
+
     if not args.skip_accuracy:
         print(f"\n=== Table 1: accuracy parity ({time.time()-t0:.0f}s) ===")
         from benchmarks import table1_accuracy

@@ -1,7 +1,8 @@
-"""Multi-tenant serving demo: many users edit their documents concurrently
-and the batch server serves every pending edit with capacity-bucketed,
-vmapped jit dispatches (ISSUE 1 tentpole) — the traffic-serving deployment
-of the paper's dirty-slot incremental algorithm.
+"""Multi-tenant serving demo: many users edit their documents concurrently —
+replacing, INSERTING and DELETING tokens — and the batch server serves every
+pending edit with capacity-bucketed, vmapped jit dispatches (ISSUE 2
+tentpole: the full edit algebra over slot-buffer documents) — the
+traffic-serving deployment of the paper's dirty-slot incremental algorithm.
 
     PYTHONPATH=src python examples/incremental_serving.py
 """
@@ -25,32 +26,49 @@ server = BatchServer(params, cfg, edit_capacity=4, row_capacity=32,
 N_DOCS = 12
 docs = {}
 for i in range(N_DOCS):
-    n = int(rng.integers(48, 128))  # mixed lengths -> multiple n_cap buckets
+    n = int(rng.integers(48, 100))  # mixed lengths -> multiple n_cap buckets
     docs[f"user{i}"] = list(corpus.document(n, i))
 server.open_documents(docs)  # same-bucket docs share one ingest dispatch
 print(f"opened {N_DOCS} documents via batched ingest "
       f"({server.stats.rejits} compiled ingest shapes)")
 
 # ---- simulate edit traffic ------------------------------------------------
-# Each tick, a random subset of users submits replace-edits; the scheduler
-# groups all pending edits into capacity buckets and serves each bucket with
-# ONE vmapped jit step.
-print("\ntraffic: 6 ticks of concurrent edits")
+# Each tick, a random subset of users edits: ~45% replaces, ~35% inserts,
+# ~20% deletes (an editing session is insert/delete-heavy — prefix-growing
+# typing plus corrections). The scheduler translates sequence positions to
+# slots, groups pending edits into typed (n_cap, C, R, op) buckets, and
+# serves each bucket with ONE vmapped jit step; replace/insert/delete
+# buckets share the same compiled step (the op vector is data).
+print("\ntraffic: 6 ticks of concurrent mixed edits")
 for tick in range(6):
     n_active = int(rng.integers(3, N_DOCS + 1))
     for uid in rng.choice(N_DOCS, n_active, replace=False):
         doc_id = f"user{uid}"
+        ref = docs[doc_id]
         for _ in range(int(rng.integers(1, 4))):
-            pos = int(rng.integers(len(docs[doc_id])))
-            tok = int(rng.integers(cfg.vocab))
-            server.submit_replace(doc_id, pos, tok)
-            docs[doc_id][pos] = tok
+            op = rng.choice(["replace", "insert", "delete"],
+                            p=[0.45, 0.35, 0.20])
+            if op == "replace":
+                pos = int(rng.integers(len(ref)))
+                tok = int(rng.integers(cfg.vocab))
+                server.submit_replace(doc_id, pos, tok)
+                ref[pos] = tok
+            elif op == "insert":
+                pos = int(rng.integers(len(ref) + 1))
+                tok = int(rng.integers(cfg.vocab))
+                server.submit_insert(doc_id, pos, tok)
+                ref.insert(pos, tok)
+            elif len(ref) > 1:
+                pos = int(rng.integers(len(ref)))
+                server.submit_delete(doc_id, pos)
+                del ref[pos]
     pending = server.pending_count()
     applied = server.flush()
     s = server.stats
     print(f"  tick {tick}: {pending:2d} pending -> {applied:2d} applied in "
           f"{s.batch_steps} total dispatches "
-          f"(mean batch {s.mean_batch:.1f}, overflows {s.overflows})")
+          f"(mean batch {s.mean_batch:.1f}, overflows {s.overflows}, "
+          f"defrags {s.defrags}, grows {s.grows})")
 
 # ---- verify + inspect -----------------------------------------------------
 for doc_id, ref in docs.items():
@@ -58,11 +76,14 @@ for doc_id, ref in docs.items():
 some_doc = "user0"
 logits = server.logits(some_doc)
 s = server.stats
-print(f"\nall {N_DOCS} token buffers match the edit-replayed references")
+print(f"\nall {N_DOCS} token buffers match the edit-replayed references "
+      f"(lengths changed under inserts/deletes: "
+      f"{[len(docs[f'user{i}']) for i in range(4)]}...)")
 print(f"logits({some_doc!r}): shape {logits.shape}, "
       f"argmax token {int(logits.argmax())}")
 print(f"server totals: {s.edits_applied} edits in {s.batch_steps} batched "
       f"dispatches (mean batch {s.mean_batch:.1f}), {s.overflows} overflows, "
+      f"{s.defrags} defrags, {s.grows} grows, "
       f"{s.full_forwards} full forwards, {s.rejits} traced shapes")
 
 # ---- op-count view (the paper's metric, single-worker server) ------------
@@ -72,9 +93,12 @@ op_server = IncrementalServer(params, cfg)
 base = list(corpus.document(256, 999))
 op_server.open_document("doc", base)
 new = list(base)
-for pos in rng.choice(256, 5, replace=False):
+for pos in sorted(rng.choice(256, 3, replace=False), reverse=True):
     new[int(pos)] = int(rng.integers(cfg.vocab))
+new.insert(128, int(rng.integers(cfg.vocab)))  # a structural edit too
+del new[40]
 ops = op_server.submit_revision("doc", new)
 dense = op_server._dense_ops(len(new))
-print(f"\nop-count view: 5-token revision of a 256-token doc costs "
-      f"{dense/max(ops,1):.1f}X less than recompute-from-scratch")
+print(f"\nop-count view: a 5-edit revision (replaces+insert+delete) of a "
+      f"256-token doc costs {dense/max(ops,1):.1f}X less than "
+      f"recompute-from-scratch")

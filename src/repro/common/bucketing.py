@@ -1,0 +1,16 @@
+"""Capacity bucketing shared by the serving scheduler and the kernels.
+
+Every dynamic quantity in the static-shape path (edit count, dirty-row
+count, document length, batch size) is rounded up to a power-of-two
+bucket so the compiled-shape grid stays O(log) in each dimension.
+"""
+from __future__ import annotations
+
+
+def next_pow2(n: int, minimum: int = 1) -> int:
+    """The smallest power-of-two multiple of ``minimum`` >= ``n``
+    (``minimum`` itself must be a power of two for pow2 results)."""
+    c = max(int(minimum), 1)
+    while c < n:
+        c *= 2
+    return c

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import difflib
 from dataclasses import dataclass
-from typing import Iterable, Sequence
+from typing import Iterable, Optional, Sequence
 
 import numpy as np
 
@@ -41,13 +41,26 @@ def apply_edits(tokens: Sequence[int], edits: Iterable[Edit]) -> list[int]:
     return t
 
 
-def edit_script(old: Sequence[int], new: Sequence[int]) -> list[Edit]:
-    """Minimal-ish edit script old -> new, as a sequence of atomic edits whose
-    positions refer to the sequence state *at the time of application*."""
+def align(old: Sequence[int], new: Sequence[int]) -> list[tuple]:
+    """difflib opcodes aligning ``old`` against ``new`` — the single source
+    of truth for revision alignment. Compute once and share between the
+    edit-script view (``edit_script(..., opcodes=...)``) and the engine's
+    batched revision path (``IncrementalEngine.apply_revision``); aligning
+    twice per request is pure waste (the alignment is O(n·m))."""
     sm = difflib.SequenceMatcher(a=list(old), b=list(new), autojunk=False)
+    return sm.get_opcodes()
+
+
+def edit_script(old: Sequence[int], new: Sequence[int],
+                opcodes: Optional[list] = None) -> list[Edit]:
+    """Minimal-ish edit script old -> new, as a sequence of atomic edits whose
+    positions refer to the sequence state *at the time of application*.
+    Pass precomputed ``align(old, new)`` opcodes to skip the alignment."""
+    if opcodes is None:
+        opcodes = align(old, new)
     edits: list[Edit] = []
     shift = 0  # cumulative position shift from edits of *previous* opcodes
-    for tag, i1, i2, j1, j2 in sm.get_opcodes():
+    for tag, i1, i2, j1, j2 in opcodes:
         if tag == "equal":
             continue
         if tag == "replace":

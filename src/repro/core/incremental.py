@@ -526,22 +526,24 @@ class IncrementalEngine:
         return state
 
     def apply_revision(self, state: DocState, new_tokens: Sequence[int],
-                       allocator=None) -> DocState:
+                       allocator=None, opcodes=None) -> DocState:
         """Offline batch path (paper §3 / App. A.1): align a whole revision
         against the cached document and process ALL structural changes in a
         single pass per layer — one column-patch sweep instead of one per
         edit. Falls back to a (counted) full forward when the positional
-        gaps cannot host the inserted tokens.
+        gaps cannot host the inserted tokens. Pass precomputed
+        ``core.edits.align(state.tokens, new_tokens)`` opcodes to reuse an
+        alignment the caller already needed (e.g. for edit-count stats).
         """
-        import difflib
+        from repro.core.edits import align
 
         old_tokens = state.tokens
         new_tokens = np.asarray(list(new_tokens), np.int64)
-        sm = difflib.SequenceMatcher(a=list(old_tokens), b=list(new_tokens),
-                                     autojunk=False)
+        if opcodes is None:
+            opcodes = align(old_tokens, new_tokens)
         kept_old, kept_new = [], []
         m0 = None  # first new index affected by any change
-        for tag, i1, i2, j1, j2 in sm.get_opcodes():
+        for tag, i1, i2, j1, j2 in opcodes:
             if tag == "equal":
                 kept_old.extend(range(i1, i2))
                 kept_new.extend(range(j1, j2))

@@ -37,6 +37,18 @@ def spread_positions(n: int, pool_size: int) -> np.ndarray:
     return (np.arange(n, dtype=np.int64) * pool_size // max(n, 1)).astype(np.int64)
 
 
+def spread_positions_gapped(n: int, pool_size: int) -> np.ndarray:
+    """Even spread leaving a gap at BOTH boundaries — id_i = (i+1)·pool/(n+1)
+    — so inserting before the first or after the last token still finds a
+    fresh id. This is the allocator's layout (initial and post-defrag);
+    ``spread_positions`` (front-anchored) remains for padded-buffer layouts
+    where slot 0 must stay addressable at id 0."""
+    if n >= pool_size:
+        raise ValueError(f"pool of {pool_size} cannot spread {n} gapped ids")
+    return ((np.arange(1, n + 1, dtype=np.int64) * pool_size)
+            // (n + 1)).astype(np.int64)
+
+
 class PositionAllocator:
     """Host-side position-id allocator for the online editing engine.
 
@@ -48,11 +60,56 @@ class PositionAllocator:
 
     def __init__(self, n: int, pool_size: int):
         self.pool_size = int(pool_size)
-        self.positions: list[int] = [int(p) for p in spread_positions(n, pool_size)]
+        self.positions: list[int] = self._spread(n)
         self.defrag_count = 0
+
+    def _spread(self, n: int) -> list[int]:
+        """Boundary-gapped spread; dense 0..n-1 when the pool is full."""
+        if n < self.pool_size:
+            return [int(p) for p in spread_positions_gapped(n, self.pool_size)]
+        return [int(p) for p in spread_positions(n, self.pool_size)]
 
     def __len__(self) -> int:
         return len(self.positions)
+
+    # --------------------------------------------------- snapshot / restore
+    # Device-friendly views: the jit serving path keeps position ids resident
+    # on-device inside its slot buffers, so the host allocator must be able
+    # to export its state as a dense int32 array (to build device inputs and
+    # to checkpoint before a speculative bucket take) and re-adopt one (to
+    # roll back after a failed dispatch).
+
+    def snapshot(self) -> np.ndarray:
+        """The in-use ids, sequence-ordered, as an int32 array."""
+        return np.asarray(self.positions, np.int32)
+
+    def restore(self, ids) -> None:
+        """Adopt a previously snapshotted id sequence (rollback path)."""
+        ids = [int(p) for p in np.asarray(ids).reshape(-1)]
+        if any(b <= a for a, b in zip(ids, ids[1:])):
+            raise ValueError("position ids must be strictly increasing")
+        if ids and not (0 <= ids[0] and ids[-1] < self.pool_size):
+            raise ValueError(
+                f"ids out of pool range [0, {self.pool_size})")
+        self.positions = ids
+
+    # --------------------------------------------------------- gap queries
+
+    def gap_at(self, i: int) -> int:
+        """Number of free ids strictly between the would-be neighbours of an
+        insertion at sequence index i. 0 means ``insert_at(i)`` would fail —
+        gap exhaustion, the caller must defragment (a counted full pass)."""
+        lo = self.positions[i - 1] if i > 0 else -1
+        hi = self.positions[i] if i < len(self.positions) else self.pool_size
+        return max(hi - lo - 1, 0)
+
+    def can_insert_at(self, i: int) -> bool:
+        return self.gap_at(i) > 0
+
+    def min_gap(self) -> int:
+        """The tightest insertion gap anywhere (including both boundaries).
+        0 signals that *some* insertion point is already exhausted."""
+        return min(self.gap_at(i) for i in range(len(self.positions) + 1))
 
     def insert_at(self, i: int) -> int | None:
         """Allocate an id for a token inserted at sequence index i (before the
@@ -69,8 +126,9 @@ class PositionAllocator:
         return self.positions.pop(i)
 
     def defragment(self) -> list[int]:
-        """Re-spread all ids evenly. Invalidates cached activations (every
-        position embedding changes) — the engine counts this as a full pass."""
-        self.positions = [int(p) for p in spread_positions(len(self.positions), self.pool_size)]
+        """Re-spread all ids evenly (gaps at both boundaries). Invalidates
+        cached activations (every position embedding changes) — the engine
+        counts this as a full pass."""
+        self.positions = self._spread(len(self.positions))
         self.defrag_count += 1
         return self.positions

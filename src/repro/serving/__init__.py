@@ -1,6 +1,8 @@
 from repro.serving.engine import IncrementalServer, ServerStats
 from repro.serving.decode import make_serve_step
-from repro.serving.jit_engine import JitIncrementalEngine, JitState
+from repro.serving.jit_engine import (
+    JitIncrementalEngine, JitState, OP_DELETE, OP_INSERT, OP_REPLACE,
+)
 from repro.serving.batch_engine import (
     BatchedJitEngine, BatchedJitState, stack_states, unstack_state,
 )

@@ -8,15 +8,20 @@ the engine's un-jitted ``*_impl`` methods over a leading document axis:
 
 * ``BatchedJitState`` — the same ``JitState`` NamedTuple, every leaf with a
   leading ``[B]`` batch axis (``stack_states`` / ``unstack_state`` convert);
-* ``batch_full_forward(tokens [B, n], positions [B, n])`` — one fused
-  program ingests B documents;
-* ``batch_apply_replaces(state, edit_pos [B, C], edit_tok [B, C])`` — one
-  fused step applies up to C replace-edits to EACH of B documents and
-  returns a per-document ``overflow [B]`` bool vector. Documents in the
-  batch may have disjoint edit buckets (pad unused slots with -1) —
-  including all-empty buckets, which leave that document unchanged.
+* ``batch_full_forward(tokens [B, n], positions [B, n], valid [B, n])`` —
+  one fused program ingests B slot-buffer documents;
+* ``batch_apply_edits(state, slot/tok/pos_id/op [B, C])`` — one fused step
+  applies up to C typed edits (replace / insert / delete, see the opcodes
+  in ``jit_engine``) to EACH of B documents and returns a per-document
+  ``overflow [B]`` bool vector. Documents in the batch may have disjoint
+  edit buckets (pad unused slots with -1) — including all-empty buckets,
+  which leave that document unchanged. The op vector is *data*, so
+  replace-, insert- and delete-typed scheduler buckets all share this one
+  compiled step — no per-op re-jit;
+* ``batch_apply_replaces`` / ``batch_apply_inserts`` / ``batch_apply_deletes``
+  — typed conveniences over the same impl.
 
-All documents in a batch must share the capacities ``(n, C, R)`` — the
+All documents in a batch must share the capacities ``(n_cap, C, R)`` — the
 batch server's capacity buckets guarantee this. With
 ``use_patch_kernel=True`` the per-layer column patch runs through the
 ``incr_patch`` Pallas kernel; under vmap its grid gains a leading batch
@@ -29,6 +34,7 @@ engine run on document b (tested in tests/test_batch_serving.py).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -59,24 +65,58 @@ class BatchedJitEngine(JitIncrementalEngine):
     # ------------------------------------------------------------ batched API
 
     @functools.partial(jax.jit, static_argnums=0)
-    def batch_full_forward(self, tokens: jax.Array,
-                           positions: jax.Array) -> BatchedJitState:
-        """tokens/positions: [B, n] int32 → stacked state, leaves [B, ...]."""
-        return jax.vmap(self._full_forward_impl)(tokens, positions)
+    def batch_full_forward(self, tokens: jax.Array, positions: jax.Array,
+                           valid: Optional[jax.Array] = None
+                           ) -> BatchedJitState:
+        """tokens/positions: [B, n] int32, valid: [B, n] bool (None = all
+        real) → stacked state, leaves [B, ...]."""
+        if valid is None:
+            return jax.vmap(
+                lambda t, p: self._full_forward_impl(t, p))(tokens, positions)
+        return jax.vmap(self._full_forward_impl)(tokens, positions, valid)
 
     @functools.partial(jax.jit, static_argnums=0)
-    def batch_apply_replaces(
-        self, state: BatchedJitState, edit_pos: jax.Array, edit_tok: jax.Array,
+    def batch_apply_edits(
+        self, state: BatchedJitState, slot: jax.Array, tok: jax.Array,
+        pos_id: jax.Array, op: jax.Array,
     ) -> tuple[BatchedJitState, jax.Array]:
-        """edit_pos/edit_tok: [B, C] int32 (pad unused slots with -1).
+        """slot/tok/pos_id/op: [B, C] int32 (pad unused slots with -1).
         Returns (new_state, overflow [B] bool). A document whose overflow
         flag is set exceeded its row bucket R at some layer; its slice is
         UNRELIABLE and the caller must re-run a full forward for it (the
         batch server's fallback + capacity-doubling policy)."""
-        return jax.vmap(self._apply_replaces_impl)(state, edit_pos, edit_tok)
+        return jax.vmap(self._apply_edits_impl)(state, slot, tok, pos_id, op)
+
+    def batch_apply_replaces(
+        self, state: BatchedJitState, edit_pos: jax.Array, edit_tok: jax.Array,
+    ) -> tuple[BatchedJitState, jax.Array]:
+        """Replace-only bucket: edit_pos/edit_tok [B, C] int32 (pad -1)."""
+        z = jnp.zeros_like(edit_pos)
+        return self.batch_apply_edits(state, edit_pos, edit_tok, z, z)
+
+    def batch_apply_inserts(
+        self, state: BatchedJitState, slot: jax.Array, tok: jax.Array,
+        pos_id: jax.Array,
+    ) -> tuple[BatchedJitState, jax.Array]:
+        """Insert-only bucket: claim free slots with fresh mid-gap ids."""
+        from repro.serving.jit_engine import OP_INSERT
+
+        op = jnp.where(slot >= 0, OP_INSERT, 0).astype(slot.dtype)
+        return self.batch_apply_edits(state, slot, tok, pos_id, op)
+
+    def batch_apply_deletes(
+        self, state: BatchedJitState, slot: jax.Array,
+    ) -> tuple[BatchedJitState, jax.Array]:
+        """Delete-only bucket: invalidate slots, subtract their columns."""
+        from repro.serving.jit_engine import OP_DELETE
+
+        z = jnp.zeros_like(slot)
+        op = jnp.where(slot >= 0, OP_DELETE, 0).astype(slot.dtype)
+        return self.batch_apply_edits(state, slot, z, z, op)
 
     @functools.partial(jax.jit, static_argnums=0)
     def batch_logits_at(self, state: BatchedJitState,
                         index: jax.Array) -> jax.Array:
-        """index: [B] int32 per-document row (n_real − 1 for padded docs)."""
+        """index: [B] int32 per-document slot (the last-in-position-order
+        valid slot for padded docs — the host scheduler tracks it)."""
         return jax.vmap(self._logits_at_impl)(state, index)

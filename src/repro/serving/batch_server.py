@@ -3,17 +3,29 @@
 The serving model (ROADMAP north star: heavy concurrent traffic):
 
 1. clients ``open_document`` (or ``open_documents`` for a fleet) — each
-   token buffer is padded up to a power-of-two length bucket ``n_cap``;
-   same-bucket documents ingest together through a batched full forward;
-2. clients ``submit_replace`` edits, which queue per-document (FIFO);
-3. ``step()`` runs ONE scheduling round: documents with pending edits are
-   grouped into **capacity buckets** keyed by ``(n_cap, C, R)`` — all shape
-   parameters of the jitted step — each group is chunked to ``max_batch``
-   documents, each document contributes up to ``C`` queued edits (conflicting
-   writes to the same position stay queued for the next round, preserving
-   submission order), and one fixed-shape ``batch_apply_replaces`` dispatch
-   serves the whole chunk;
-4. a document whose per-doc overflow flag trips gets a full-forward
+   document lives in a **slot buffer** padded up to a power-of-two capacity
+   ``n_cap``: real tokens occupy slots with a ``valid`` mask and gapped
+   position ids (paper §3.3), sequence order is the position-id order, and
+   the host keeps the slot↔sequence mapping. Same-bucket documents ingest
+   together through a batched full forward;
+2. clients submit edits from the FULL algebra — ``submit_replace``,
+   ``submit_insert``, ``submit_delete`` (or ``submit_edit`` with a
+   ``core.edits.Edit``) — which queue per-document (FIFO) in *sequence*
+   coordinates, exactly as an editor emits them;
+3. ``step()`` runs ONE scheduling round: each ready document contributes a
+   **typed bucket** — the longest same-op FIFO prefix of its queue, up to
+   ``C`` edits, translated from sequence coordinates to slots at take time
+   (inserts claim a free slot + a mid-gap position id; deletes release
+   theirs) — and documents are grouped by ``(n_cap, C, R, op)``. Every
+   group chunk is served by ONE fixed-shape ``batch_apply_edits`` dispatch;
+   the op vector is data, so replace/insert/delete buckets share a single
+   compiled step per ``(B, n_cap, C, R)`` — no per-op re-jit;
+4. structural edits have two *scheduled* slow paths, both full-forward
+   re-ingests at bucket boundaries: **defrag** when a gap is exhausted
+   (position ids re-spread, paper: "akin to defragmentation") and **grow**
+   when the slot buffer is full (``n_cap`` doubles — a re-jit at the new
+   shape, amortized);
+5. a document whose per-doc overflow flag trips gets a full-forward
    **fallback** (its batched slice is discarded) and its row capacity ``R``
    doubles — capped at ``n_cap``, at which point overflow is impossible —
    moving it to a bigger bucket whose first dispatch re-jits (the classic
@@ -23,12 +35,15 @@ Scheduler invariants (property-tested in tests/test_batch_scheduler.py):
 every submitted edit is applied exactly once; all bucket capacities
 (``n_cap``, ``C``, ``R``) are powers of two; per-document FIFO submission
 order is preserved, so final token buffers equal the edit-replayed
-reference under any interleaving of submits and flushes.
+reference under any interleaving of submits and flushes. A failed dispatch
+(device OOM, interrupt) rolls the affected documents back to their
+pre-take snapshots — host mirrors, slot maps, position allocator
+(``PositionAllocator.snapshot``/``restore``) and queues — losing nothing.
 
-Padding correctness: pad rows sit AFTER every real row, so under causal
-attention they never influence a real row; their own (garbage) activations
-are maintained but unread. They can consume propagation slots, which only
-makes overflow conservative, never wrong.
+Padding correctness: free slots are ``valid=False``, so the position-order
+causal mask excludes them from every real row's context; their (garbage)
+activations are maintained but unread. They can consume propagation slots,
+which only makes overflow conservative, never wrong.
 
 Known cost: each dispatch stacks members' full ``JitState`` into a batched
 pytree and unstacks the result — O(total state size) copies per round, not
@@ -45,19 +60,19 @@ from typing import Optional, Sequence
 import jax.numpy as jnp
 import numpy as np
 
+from repro.common.bucketing import next_pow2
 from repro.configs.base import ArchConfig
-from repro.core.positional import spread_positions
+from repro.core.edits import Edit
+from repro.core.positional import PositionAllocator
 from repro.serving.batch_engine import (
     BatchedJitEngine, stack_states, unstack_state,
 )
-from repro.serving.jit_engine import JitState
+from repro.serving.jit_engine import (
+    JitState, OP_DELETE, OP_INSERT, OP_REPLACE,
+)
 
 
-def next_pow2(n: int, minimum: int = 1) -> int:
-    c = max(int(minimum), 1)
-    while c < n:
-        c *= 2
-    return c
+_OPCODE = {"replace": OP_REPLACE, "insert": OP_INSERT, "delete": OP_DELETE}
 
 
 @dataclass
@@ -68,7 +83,9 @@ class BatchStats:
     batch_steps: int = 0  # batched dispatches issued
     batched_docs: int = 0  # sum of dispatch group sizes
     overflows: int = 0
-    full_forwards: int = 0  # ingests + overflow fallbacks
+    full_forwards: int = 0  # ingests + overflow/defrag/grow re-ingests
+    defrags: int = 0  # gap exhaustion -> position-id re-spread
+    grows: int = 0  # slot buffer full -> n_cap doubling
     rejits: int = 0  # distinct dispatch shapes traced
 
     @property
@@ -79,17 +96,31 @@ class BatchStats:
 @dataclass
 class _BatchDoc:
     doc_id: str
-    tokens: np.ndarray  # [n_cap] int32, host-side source of truth
-    n: int  # real length (rows n..n_cap-1 are padding)
+    tokens: np.ndarray  # [n_cap] int32 slot buffer, host-side source of truth
+    valid: np.ndarray  # [n_cap] bool
+    positions: np.ndarray  # [n_cap] int32 (gapped ids; free slots: sentinel)
+    slots: list  # sequence index -> slot (the host's order oracle)
+    free: list  # free slot indices
     n_cap: int
     row_capacity: int  # per-document R; doubles on overflow
-    positions: np.ndarray  # [n_cap] int32
+    allocator: PositionAllocator  # sequence-ordered gapped position ids
     state: JitState  # device state at padded shape
-    pending: deque = field(default_factory=deque)  # FIFO of (pos, tok)
+    pending: deque = field(default_factory=deque)  # FIFO of (op, pos, tok)
+    n_virtual: int = 0  # length after every queued edit applies
+
+    @property
+    def n(self) -> int:  # real length
+        return len(self.slots)
+
+    def seq_tokens(self) -> np.ndarray:
+        return self.tokens[np.asarray(self.slots, np.int64)]
+
+    def seq_positions(self) -> np.ndarray:
+        return self.positions[np.asarray(self.slots, np.int64)]
 
 
 class BatchServer:
-    """Replace-edit serving for many documents over one vmapped jit engine."""
+    """Full-edit-algebra serving for many documents over one vmapped engine."""
 
     def __init__(self, params: dict, cfg: ArchConfig, *, edit_capacity: int = 8,
                  row_capacity: int = 64, max_batch: int = 8,
@@ -137,14 +168,21 @@ class BatchServer:
         shapes instead of one per observed group size."""
         return min(next_pow2(chunk_len), self.max_batch)
 
+    @property
+    def _pos_sentinel(self) -> int:
+        # Free slots point at the last pool embedding: always in-bounds for
+        # the gather, >= every allocated id, and masked out by valid anyway.
+        return self.pos_pool - 1
+
     # ------------------------------------------------------------- documents
 
     def open_document(self, doc_id: str, tokens: Sequence[int]) -> None:
         self.open_documents({doc_id: tokens})
 
     def open_documents(self, items: dict) -> None:
-        """Ingest a fleet at once: documents sharing a length bucket are run
-        through ONE ``batch_full_forward`` dispatch (chunked like edits)."""
+        """Ingest a fleet at once: documents sharing a capacity bucket are
+        run through ONE ``batch_full_forward`` dispatch (chunked like
+        edits)."""
         prepared = []
         for doc_id, tokens in items.items():
             if doc_id in self.docs:
@@ -152,87 +190,231 @@ class BatchServer:
             n = len(tokens)
             if n < 1:
                 raise ValueError("empty document")
+            toks = np.asarray(tokens, np.int32)
+            if toks.size and not (0 <= toks.min() and toks.max() < self.cfg.vocab):
+                raise ValueError(
+                    f"document {doc_id!r} has tokens outside vocab of "
+                    f"{self.cfg.vocab}")
             n_cap = next_pow2(n, self.min_doc_capacity)
+            alloc = PositionAllocator(n, self.pos_pool)
             padded = np.zeros(n_cap, np.int32)
-            padded[:n] = np.asarray(tokens, np.int32)
-            positions = spread_positions(n_cap, self.pos_pool).astype(np.int32)
-            prepared.append((doc_id, padded, n, n_cap, positions))
+            padded[:n] = toks
+            valid = np.zeros(n_cap, bool)
+            valid[:n] = True
+            positions = np.full(n_cap, self._pos_sentinel, np.int32)
+            positions[:n] = alloc.snapshot()
+            prepared.append((doc_id, padded, valid, positions, n, n_cap, alloc))
         eng = self.engine(self.C, self.R)
         groups: dict[int, list] = {}
         for p in prepared:
-            groups.setdefault(p[3], []).append(p)
+            groups.setdefault(p[5], []).append(p)
         for n_cap, members in sorted(groups.items()):
             for lo in range(0, len(members), self.max_batch):
                 chunk = members[lo:lo + self.max_batch]
                 B_pad = self._padded_batch(len(chunk))
-                toks = np.stack([c[1] for c in chunk]
-                                + [chunk[0][1]] * (B_pad - len(chunk)))
-                poss = np.stack([c[4] for c in chunk]
-                                + [chunk[0][4]] * (B_pad - len(chunk)))
-                bstate = eng.batch_full_forward(jnp.asarray(toks),
-                                                jnp.asarray(poss))
+                pad = [chunk[0]] * (B_pad - len(chunk))
+                toks = np.stack([c[1] for c in chunk + pad])
+                vals = np.stack([c[2] for c in chunk + pad])
+                poss = np.stack([c[3] for c in chunk + pad])
+                bstate = eng.batch_full_forward(
+                    jnp.asarray(toks), jnp.asarray(poss), jnp.asarray(vals))
                 self._count_shape(("full", B_pad, n_cap))
-                for b, (doc_id, padded, n, n_cap, positions) in enumerate(chunk):
+                for b, (doc_id, padded, valid, positions, n, n_cap,
+                        alloc) in enumerate(chunk):
                     self.docs[doc_id] = _BatchDoc(
-                        doc_id=doc_id, tokens=padded, n=n, n_cap=n_cap,
-                        row_capacity=min(self.R, n_cap), positions=positions,
-                        state=unstack_state(bstate, b))
+                        doc_id=doc_id, tokens=padded, valid=valid,
+                        positions=positions, slots=list(range(n)),
+                        free=list(range(n_cap - 1, n - 1, -1)), n_cap=n_cap,
+                        row_capacity=min(self.R, n_cap), allocator=alloc,
+                        state=unstack_state(bstate, b), n_virtual=n)
                     self.stats.docs += 1
                     self.stats.full_forwards += 1
 
-    def submit_replace(self, doc_id: str, pos: int, tok: int) -> None:
-        doc = self.docs[doc_id]
-        if not 0 <= pos < doc.n:
-            raise IndexError(f"pos {pos} out of range for doc of length {doc.n}")
+    # ------------------------------------------------------------- submits
+
+    def _check_tok(self, tok: int) -> None:
         if not 0 <= tok < self.cfg.vocab:
             raise ValueError(f"token {tok} outside vocab of {self.cfg.vocab}")
-        doc.pending.append((int(pos), int(tok)))
+
+    def submit_replace(self, doc_id: str, pos: int, tok: int) -> None:
+        doc = self.docs[doc_id]
+        if not 0 <= pos < doc.n_virtual:
+            raise IndexError(
+                f"pos {pos} out of range for doc of length {doc.n_virtual}")
+        self._check_tok(tok)
+        doc.pending.append(("replace", int(pos), int(tok)))
         self.stats.edits_submitted += 1
+
+    def submit_insert(self, doc_id: str, pos: int, tok: int) -> None:
+        """Insert ``tok`` before sequence index ``pos`` (``pos == n``
+        appends). Positions refer to the sequence state after every
+        previously queued edit applies, exactly like an edit script."""
+        doc = self.docs[doc_id]
+        if not 0 <= pos <= doc.n_virtual:
+            raise IndexError(
+                f"insert pos {pos} out of range for doc of length {doc.n_virtual}")
+        self._check_tok(tok)
+        doc.pending.append(("insert", int(pos), int(tok)))
+        doc.n_virtual += 1
+        self.stats.edits_submitted += 1
+
+    def submit_delete(self, doc_id: str, pos: int) -> None:
+        doc = self.docs[doc_id]
+        if not 0 <= pos < doc.n_virtual:
+            raise IndexError(
+                f"delete pos {pos} out of range for doc of length {doc.n_virtual}")
+        if doc.n_virtual <= 1:
+            raise ValueError("cannot delete the last remaining token")
+        doc.pending.append(("delete", int(pos), 0))
+        doc.n_virtual -= 1
+        self.stats.edits_submitted += 1
+
+    def submit_edit(self, doc_id: str, e: Edit) -> None:
+        """Submit a ``core.edits.Edit`` (op/pos/token) as queued traffic."""
+        if e.op == "replace":
+            self.submit_replace(doc_id, e.pos, e.token)
+        elif e.op == "insert":
+            self.submit_insert(doc_id, e.pos, e.token)
+        else:
+            self.submit_delete(doc_id, e.pos)
 
     def pending_count(self) -> int:
         return sum(len(d.pending) for d in self.docs.values())
 
+    # ------------------------------------------------------- snapshot/rollback
+
+    def _snapshot(self, doc: _BatchDoc) -> tuple:
+        return (doc.tokens.copy(), doc.valid.copy(), doc.positions.copy(),
+                list(doc.slots), list(doc.free), doc.n_cap, doc.row_capacity,
+                doc.allocator.snapshot(), doc.state, deque(doc.pending),
+                doc.n_virtual)
+
+    def _restore(self, doc: _BatchDoc, snap: tuple) -> None:
+        (doc.tokens, doc.valid, doc.positions, doc.slots, doc.free, doc.n_cap,
+         doc.row_capacity, alloc_ids, doc.state, doc.pending,
+         doc.n_virtual) = snap
+        doc.allocator.restore(alloc_ids)
+
     # ------------------------------------------------------------- scheduling
 
-    def _take_bucket(self, doc: _BatchDoc) -> tuple[np.ndarray, np.ndarray]:
-        """Pop up to C pending edits into a padded (-1) edit bucket. A second
-        write to a position already in this bucket stays queued — buckets
-        scatter, and only distinct positions keep last-writer order exact.
-        Edits to other positions commute with the deferred write, so they
-        still ship this round; per-position FIFO order is what matters."""
-        edit_pos = np.full(self.C, -1, np.int32)
-        edit_tok = np.zeros(self.C, np.int32)
-        taken: set[int] = set()
-        kept = deque()
+    def _take_bucket(self, doc: _BatchDoc):
+        """Pop the longest same-op FIFO prefix (up to C) into a typed edit
+        bucket, translating sequence coordinates to slots as each edit is
+        peeled — so every queued position means "the sequence as all earlier
+        edits left it", matching edit-script semantics. Host mirrors
+        (tokens/valid/positions/slot map/allocator) are updated here; the
+        device catches up at dispatch. Returns (op_kind, arrays, count)."""
+        kind = doc.pending[0][0]
+        slot_a = np.full(self.C, -1, np.int32)
+        tok_a = np.zeros(self.C, np.int32)
+        pos_a = np.zeros(self.C, np.int32)
+        op_a = np.full(self.C, _OPCODE[kind], np.int32)
         i = 0
-        while doc.pending and i < self.C:
-            pos, tok = doc.pending.popleft()
-            if pos in taken:
-                kept.append((pos, tok))  # conflicts queue for the next round,
-                continue                 # in submission order
-            taken.add(pos)
-            edit_pos[i] = pos
-            edit_tok[i] = tok
-            i += 1
-        # unscanned edits were submitted after every kept one; append them
-        kept.extend(doc.pending)
-        doc.pending.clear()
-        doc.pending.extend(kept)
-        return edit_pos, edit_tok
+        if kind == "replace":
+            # Same-slot conflicts stay queued for the next round (a scatter
+            # bucket holds one write per slot; distinct-slot replaces
+            # commute, so later ones may still ship this round). Scanning
+            # stops at the first structural op — replaces do NOT commute
+            # across an insert/delete.
+            taken: set[int] = set()
+            kept: list = []
+            while doc.pending and i < self.C:
+                if doc.pending[0][0] != "replace":
+                    break
+                _, pos, tok = doc.pending.popleft()
+                s = doc.slots[pos]
+                if s in taken:
+                    kept.append(("replace", pos, tok))
+                    continue
+                taken.add(s)
+                slot_a[i] = s
+                tok_a[i] = tok
+                pos_a[i] = doc.positions[s]
+                doc.tokens[s] = tok
+                i += 1
+            for item in reversed(kept):
+                doc.pending.appendleft(item)
+        elif kind == "insert":
+            while doc.pending and i < self.C:
+                if doc.pending[0][0] != "insert":
+                    break
+                _, pos, tok = doc.pending[0]
+                need_grow = not doc.free
+                need_defrag = not doc.allocator.can_insert_at(pos)
+                if need_grow or need_defrag:
+                    if i > 0:
+                        break  # flush the partial bucket first; the re-ingest
+                    if need_grow:  # below rebuilds device state from hosts
+                        self._grow(doc)
+                    if need_defrag:
+                        self._defrag(doc)
+                    if not doc.allocator.can_insert_at(pos):
+                        raise RuntimeError(
+                            f"position pool of {doc.allocator.pool_size} cannot "
+                            f"host a document of length {doc.n + 1}")
+                doc.pending.popleft()
+                pid = doc.allocator.insert_at(pos)
+                s = doc.free.pop()
+                doc.slots.insert(pos, s)
+                doc.tokens[s] = tok
+                doc.valid[s] = True
+                doc.positions[s] = pid
+                slot_a[i] = s
+                tok_a[i] = tok
+                pos_a[i] = pid
+                i += 1
+        else:  # delete
+            while doc.pending and i < self.C:
+                if doc.pending[0][0] != "delete":
+                    break
+                _, pos, _tok = doc.pending.popleft()
+                s = doc.slots.pop(pos)
+                doc.allocator.delete_at(pos)
+                doc.valid[s] = False
+                pos_a[i] = doc.positions[s]
+                slot_a[i] = s
+                doc.free.append(s)  # earliest reuse is the NEXT dispatch
+                i += 1
+        return kind, (slot_a, tok_a, pos_a, op_a), i
 
     def step(self) -> int:
         """One scheduling round; returns the number of edits applied."""
         ready = [d for d in self.docs.values() if d.pending]
         if not ready:
             return 0
-        groups: dict[tuple[int, int, int], list[_BatchDoc]] = {}
-        for d in ready:
-            groups.setdefault((d.n_cap, self.C, d.row_capacity), []).append(d)
+        takes = []  # (doc, kind, arrays, count)
+        undone: dict[int, tuple] = {}  # id(doc) -> (doc, snapshot)
         applied = 0
-        for (n_cap, C, R), members in sorted(groups.items()):
-            for lo in range(0, len(members), self.max_batch):
-                applied += self._dispatch(members[lo:lo + self.max_batch],
-                                          n_cap, C, R)
+        try:
+            for d in ready:
+                snap = self._snapshot(d)
+                undone[id(d)] = (d, snap)
+                kind, arrays, count = self._take_bucket(d)
+                if count == 0:
+                    self._restore(d, snap)
+                    undone.pop(id(d))
+                    continue
+                takes.append((d, kind, arrays, count))
+            groups: dict[tuple, list] = {}
+            for t in takes:
+                groups.setdefault(
+                    (t[0].n_cap, self.C, t[0].row_capacity, t[1]),
+                    []).append(t)
+            for (n_cap, C, R, kind), members in sorted(groups.items(),
+                                                       key=lambda kv: kv[0]):
+                for lo in range(0, len(members), self.max_batch):
+                    chunk = members[lo:lo + self.max_batch]
+                    applied += self._dispatch(chunk, n_cap, C, R, kind)
+                    for t in chunk:
+                        undone.pop(id(t[0]), None)
+        except Exception:
+            # a failed take (pool exhausted mid-bucket) or dispatch (device
+            # OOM, interrupt) must not lose edits: every doc not yet served
+            # rolls back to its pre-take snapshot (host mirrors, slot map,
+            # allocator ids, queue — its device state was never replaced)
+            for d, snap in undone.values():
+                self._restore(d, snap)
+            raise
         return applied
 
     def flush(self) -> int:
@@ -242,59 +424,92 @@ class BatchServer:
             total += self.step()
         return total
 
-    def _dispatch(self, chunk: list[_BatchDoc], n_cap: int, C: int,
-                  R: int) -> int:
+    def _dispatch(self, chunk: list, n_cap: int, C: int, R: int,
+                  kind: str) -> int:
         eng = self.engine(C, R)
-        buckets = [self._take_bucket(d) for d in chunk]
-        states = [d.state for d in chunk]
+        docs = [t[0] for t in chunk]
+        buckets = [t[2] for t in chunk]
+        counts = [t[3] for t in chunk]
         # pad to a pow2 batch with copies of doc 0 carrying empty edit
         # buckets (all -1): a no-op slice whose output is discarded
         B_pad = self._padded_batch(len(chunk))
-        padded = buckets + [(np.full(C, -1, np.int32), np.zeros(C, np.int32))
-                            ] * (B_pad - len(chunk))
-        states += [states[0]] * (B_pad - len(chunk))
-        edit_pos = jnp.asarray(np.stack([b[0] for b in padded]))
-        edit_tok = jnp.asarray(np.stack([b[1] for b in padded]))
+        n_fill = B_pad - len(chunk)
+        empty = (np.full(C, -1, np.int32), np.zeros(C, np.int32),
+                 np.zeros(C, np.int32), np.zeros(C, np.int32))
+        padded = buckets + [empty] * n_fill
+        states = [d.state for d in docs] + [docs[0].state] * n_fill
+        slot = jnp.asarray(np.stack([b[0] for b in padded]))
+        tok = jnp.asarray(np.stack([b[1] for b in padded]))
+        pos = jnp.asarray(np.stack([b[2] for b in padded]))
         batched = stack_states(states)
-        try:
-            new_state, overflow = eng.batch_apply_replaces(batched, edit_pos,
-                                                           edit_tok)
-            overflow = np.asarray(overflow)
-        except Exception:
-            # a failed dispatch (OOM, interrupt) must not lose edits: put
-            # each taken bucket back at the FRONT of its queue, in order
-            for doc, (ep, et) in zip(chunk, buckets):
-                doc.pending.extendleft(
-                    (int(p), int(t)) for p, t in zip(ep[::-1], et[::-1])
-                    if p >= 0)
-            raise
+        if kind == "replace":
+            new_state, overflow = eng.batch_apply_replaces(batched, slot, tok)
+        elif kind == "insert":
+            new_state, overflow = eng.batch_apply_inserts(batched, slot, tok,
+                                                          pos)
+        else:
+            new_state, overflow = eng.batch_apply_deletes(batched, slot)
+        overflow = np.asarray(overflow)
         self.stats.batch_steps += 1
         self.stats.batched_docs += len(chunk)
+        # all three op kinds share one compiled step per (B, n_cap, C, R):
+        # the op vector is data, so `kind` is NOT part of the traced shape
         self._count_shape(("edit", B_pad, n_cap, C, R))
         applied = 0
-        for b, doc in enumerate(chunk):
-            ep, et = buckets[b]
-            n_edits = int((ep >= 0).sum())
-            applied += n_edits
-            self.stats.edits_applied += n_edits
-            doc.tokens[ep[ep >= 0]] = et[ep >= 0]
+        for b, doc in enumerate(docs):
+            applied += counts[b]
+            self.stats.edits_applied += counts[b]
             if overflow[b]:
                 self._fallback_full_forward(doc)
             else:
                 doc.state = unstack_state(new_state, b)
         return applied
 
-    def _fallback_full_forward(self, doc: _BatchDoc) -> None:
-        """Overflow: discard the unreliable batched slice, recompute from the
-        host token buffer, and double the document's row bucket."""
-        self.stats.overflows += 1
+    # ------------------------------------------------------------ slow paths
+
+    def _reingest(self, doc: _BatchDoc) -> None:
+        """Rebuild device state from the host mirrors (one full forward)."""
         eng = self.engine(self.C, self.R)
         doc.state = eng.full_forward(jnp.asarray(doc.tokens),
-                                     jnp.asarray(doc.positions))
+                                     jnp.asarray(doc.positions),
+                                     jnp.asarray(doc.valid))
         self.stats.full_forwards += 1
         self._count_shape(("full", doc.n_cap))
+
+    def _fallback_full_forward(self, doc: _BatchDoc) -> None:
+        """Overflow: discard the unreliable batched slice, recompute from the
+        host mirrors, and double the document's row bucket."""
+        self.stats.overflows += 1
+        self._reingest(doc)
         if doc.row_capacity < doc.n_cap:
             doc.row_capacity = min(doc.row_capacity * 2, doc.n_cap)
+
+    def _grow(self, doc: _BatchDoc) -> None:
+        """Slot buffer full: double ``n_cap`` (slots keep their indices, new
+        free slots appended) and re-ingest at the new shape. The first
+        dispatch in the bigger bucket re-jits — the capacity-doubling
+        policy, amortized across the fleet."""
+        old_cap, new_cap = doc.n_cap, doc.n_cap * 2
+        for name, fill in (("tokens", 0), ("valid", False),
+                           ("positions", self._pos_sentinel)):
+            arr = getattr(doc, name)
+            grown = np.full(new_cap, fill, arr.dtype)
+            grown[:old_cap] = arr
+            setattr(doc, name, grown)
+        doc.free.extend(range(new_cap - 1, old_cap - 1, -1))
+        doc.n_cap = new_cap
+        self.stats.grows += 1
+        self._reingest(doc)
+
+    def _defrag(self, doc: _BatchDoc) -> None:
+        """Gap exhaustion: re-spread every position id evenly (paper §3.3,
+        "akin to defragmentation"). Every cached activation depends on its
+        position embedding, so the document re-ingests with a full
+        forward."""
+        doc.allocator.defragment()
+        doc.positions[np.asarray(doc.slots, np.int64)] = doc.allocator.snapshot()
+        self.stats.defrags += 1
+        self._reingest(doc)
 
     # ------------------------------------------------------------- outputs
 
@@ -306,8 +521,8 @@ class BatchServer:
         return doc
 
     def tokens(self, doc_id: str) -> np.ndarray:
-        doc = self._flushed(doc_id)
-        return doc.tokens[:doc.n].copy()
+        """The document's tokens in sequence order."""
+        return self._flushed(doc_id).seq_tokens().copy()
 
     def state(self, doc_id: str) -> JitState:
         return self._flushed(doc_id).state
@@ -315,4 +530,4 @@ class BatchServer:
     def logits(self, doc_id: str) -> np.ndarray:
         doc = self._flushed(doc_id)
         eng = self.engine(self.C, self.R)
-        return np.asarray(eng.logits_at(doc.state, jnp.int32(doc.n - 1)))
+        return np.asarray(eng.logits_at(doc.state, jnp.int32(doc.slots[-1])))

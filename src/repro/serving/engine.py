@@ -14,13 +14,15 @@ Batched serving
 ---------------
 This server is the *op-counting* single-worker deployment: one NumPy engine,
 one document per request, dynamic shapes. The wall-clock, multi-tenant
-deployment lives in ``repro.serving.batch_server.BatchServer``: documents are
-padded into power-of-two capacity buckets ``(n_cap, C, R)``, pending
-replace-edits from different documents are grouped per bucket and served by
-ONE vmapped fixed-shape jit step (``batch_engine.BatchedJitEngine``), and a
-per-document overflow flag triggers a full-forward fallback plus
-capacity-doubling (R ← min(2R, n_cap)) re-jit. Use this class to *measure*
-the paper's op claims; use ``BatchServer`` to *serve traffic*.
+deployment lives in ``repro.serving.batch_server.BatchServer``: documents
+live in slot buffers padded into power-of-two capacity buckets, pending
+edits of the FULL algebra (replace/insert/delete) from different documents
+are grouped into typed ``(n_cap, C, R, op)`` buckets and served by ONE
+vmapped fixed-shape jit step (``batch_engine.BatchedJitEngine``); defrag
+and buffer growth are scheduled full-forward re-ingests, and a per-document
+overflow flag triggers a full-forward fallback plus capacity-doubling
+(R ← min(2R, n_cap)) re-jit. Use this class to *measure* the paper's op
+claims; use ``BatchServer`` to *serve traffic*.
 """
 from __future__ import annotations
 
@@ -30,7 +32,7 @@ from typing import Optional, Sequence
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core.edits import Edit, edit_script
+from repro.core.edits import Edit, align, edit_script
 from repro.core.incremental import DocState, IncrementalEngine
 from repro.core.opcount import OpCounter, dense_transformer_forward_ops
 from repro.core.positional import PositionAllocator
@@ -110,14 +112,16 @@ class IncrementalServer:
         return ops
 
     def submit_revision(self, doc_id: str, new_tokens: Sequence[int]) -> int:
-        """Offline path: align the revision against the cached base and apply
-        the edit script (replaces batched, inserts/deletes sequential)."""
+        """Offline path: align the revision against the cached base ONCE and
+        share the alignment between the edit-count stats and the engine's
+        batched revision algorithm (one column-patch sweep per layer)."""
         doc = self.docs[doc_id]
-        script = edit_script(list(doc.state.tokens), list(new_tokens))
+        opcodes = align(list(doc.state.tokens), list(new_tokens))
+        script = edit_script(list(doc.state.tokens), list(new_tokens),
+                             opcodes=opcodes)
         before = self.counter.total
-        # the batched offline algorithm (App. A.1): one alignment + one
-        # column-patch sweep per layer for the whole revision
-        doc.state = self.engine.apply_revision(doc.state, new_tokens, doc.allocator)
+        doc.state = self.engine.apply_revision(doc.state, new_tokens,
+                                               doc.allocator, opcodes=opcodes)
         ops = self.counter.total - before
         self.stats.requests += 1
         self.stats.edits += len(script)

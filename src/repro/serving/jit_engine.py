@@ -1,65 +1,94 @@
 """TPU-native incremental inference: the static-shape, jit-able version of
 ``repro.core.incremental`` (DESIGN.md §3 "dirty-slot buffers").
 
-The host-side NumPy engine uses dynamic dirty sets — ideal for op counting,
-impossible to jit. This module implements the same algorithm for REPLACE
-edits with **static capacities**:
+The host-side NumPy engine uses dynamic dirty sets and dynamically grows /
+shrinks its arrays on insert and delete — ideal for op counting, impossible
+to jit. This module implements the same algorithm for the FULL edit algebra
+(replace / insert / delete) with **static capacities** over a **slot-buffer
+document layout**:
 
-* ``C`` — edit capacity: how many columns change per step (the edit bucket);
+* ``n_cap`` — slot capacity: every document lives in a fixed-size buffer of
+  ``n_cap`` slots with a ``valid`` mask and an ``n_real`` count. Sequence
+  order is derived from the *gapped position ids* (paper §3.3), never from
+  the array index: slot j precedes slot i iff ``positions[j] <= positions[i]``
+  and both are valid. Inserting a token claims any free slot and a mid-gap
+  position id; deleting invalidates a slot in place. No data moves.
+* ``C`` — edit capacity: how many slots change per step (the edit bucket);
 * ``R`` — propagation capacity: how many rows may change per layer.
 
 Every step is one fixed-shape computation: gather dirty rows → dense
 per-location ops → column patch over all rows (the ``incr_patch`` Pallas
-kernel's math) → re-quantize (the ``vq_assign`` trick in score space) →
-scatter updates. If more than ``R`` rows change at any layer, the step
-reports ``overflow=True`` and the caller re-runs a full forward (the
-capacity-doubling / re-jit policy of serving systems).
+kernel's math, ΔT with the old contribution subtracted and the new one
+added) → re-quantize (the ``vq_assign`` trick in score space) → scatter
+updates. Inserts add a column whose *old* contribution is exactly zero
+(the claimed slot's ``k``/``vc`` are zeroed first; ``gelu(0)·0 = 0``),
+deletes subtract their column via the same ΔT patch with the *new*
+contribution zeroed — so all three ops share one compiled step. The count
+renormalization that inserts/deletes imply is automatic: counts are
+recomputed from the valid mask and position order each step. If more than
+``R`` rows change at any layer, the step reports ``overflow=True`` and the
+caller re-runs a full forward (the capacity-doubling / re-jit policy of
+serving systems).
 
 State layout (per document, all jnp, layer-stacked where possible):
-  x:      [L+1, n, d]   residual stream snapshots
-  q/k/v:  [L, n, H, dh]
-  vc:     [L, n, H, Q]  per-head value·codebook products
-  T:      [L, n, H, Q]  accumulated scores
-  codes:  [L, n, hq]
+  tokens:    [n_cap]  int32  (free slots hold garbage)
+  positions: [n_cap]  int32  gapped ids; unique among valid slots
+  valid:     [n_cap]  bool
+  n_real:    []       int32  == valid.sum()
+  x:      [L+1, n_cap, d]   residual stream snapshots
+  q/k/v:  [L, n_cap, H, dh]
+  vc:     [L, n_cap, H, Q]  per-head value·codebook products
+  T:      [L, n_cap, H, Q]  accumulated scores
+  codes:  [L, n_cap, hq]
 
-Exactness: identical codes / float-tolerance states vs the NumPy engine
-(tested in tests/test_jit_engine.py).
+Free/invalid slots carry garbage activations; every mask (causal, counts,
+changed-row detection) ANDs with ``valid`` so garbage never reaches a valid
+row. Exactness: identical codes / float-tolerance states vs the NumPy
+engine over mixed edit streams (tests/test_jit_engine.py,
+tests/test_mixed_edit_streams.py).
 
 Batched serving
 ---------------
 Because every step is a fixed-shape pure function of ``(JitState, edit
-bucket)``, a fleet of documents that share the same capacities ``(n, C, R)``
-can be served as ONE vmapped step: stack their states along a leading batch
-axis and vmap ``_full_forward_impl`` / ``_apply_replaces_impl``
-(``repro.serving.batch_engine.BatchedJitEngine``). Overflow is reported
-per-document — the scheduler (``repro.serving.batch_server.BatchServer``)
-re-runs only the overflowed documents with a full forward and doubles their
-row capacity ``R`` (a re-jit, amortized over the fleet). The un-jitted
-``*_impl`` methods exist precisely so the batched engine can wrap them in
-``jit(vmap(...))`` without nesting jit caches.
+bucket)``, a fleet of documents that share the same capacities
+``(n_cap, C, R)`` can be served as ONE vmapped step: stack their states
+along a leading batch axis and vmap ``_full_forward_impl`` /
+``_apply_edits_impl`` (``repro.serving.batch_engine.BatchedJitEngine``).
+Overflow is reported per-document — the scheduler
+(``repro.serving.batch_server.BatchServer``) re-runs only the overflowed
+documents with a full forward and doubles their row capacity ``R`` (a
+re-jit, amortized over the fleet). The un-jitted ``*_impl`` methods exist
+precisely so the batched engine can wrap them in ``jit(vmap(...))``
+without nesting jit caches.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.common.pytree import pytree_dataclass
+
+# Edit opcodes for the generic ``apply_edits`` step (int32 bucket entries).
+OP_REPLACE = 0
+OP_INSERT = 1
+OP_DELETE = 2
 
 
 class JitState(NamedTuple):
-    tokens: jax.Array  # [n] int32
-    positions: jax.Array  # [n] int32
-    x: jax.Array  # [L+1, n, d]
-    q: jax.Array  # [L, n, H, dh]
+    tokens: jax.Array  # [n_cap] int32
+    positions: jax.Array  # [n_cap] int32 (gapped ids; order == sequence order)
+    valid: jax.Array  # [n_cap] bool
+    n_real: jax.Array  # [] int32
+    x: jax.Array  # [L+1, n_cap, d]
+    q: jax.Array  # [L, n_cap, H, dh]
     k: jax.Array
     v: jax.Array
-    vc: jax.Array  # [L, n, H, Q]
-    T: jax.Array  # [L, n, H, Q]
-    codes: jax.Array  # [L, n, hq]
+    vc: jax.Array  # [L, n_cap, H, Q]
+    T: jax.Array  # [L, n_cap, H, Q]
+    codes: jax.Array  # [L, n_cap, hq]
 
 
 def _weights_from_params(params: dict, cfg: ArchConfig):
@@ -107,8 +136,23 @@ def _gelu(x):
     return jax.nn.gelu(x.astype(jnp.float32), approximate=True)
 
 
+def _order_masks(positions: jax.Array, valid: jax.Array):
+    """Causal structure of a slot buffer, derived from position-id order.
+
+    causal[i, j] = valid[j] & (positions[j] <= positions[i]) — slot j is an
+    attended (past-or-self) column of slot i. Position ids are unique among
+    valid slots (the allocator's invariant), so <= is a strict order plus
+    self. counts[i] = number of columns row i attends (clamped to 1 so
+    invalid rows' garbage normalization never divides by zero).
+    """
+    causal = ((positions[None, :] <= positions[:, None])
+              & valid[None, :]).astype(jnp.float32)  # [n, n] rows=i, cols=j
+    counts = jnp.maximum(causal.sum(-1), 1.0)  # [n]
+    return causal, counts
+
+
 class JitIncrementalEngine:
-    """Static-capacity incremental engine for VQT replace-edits."""
+    """Static-capacity incremental engine for the full VQT edit algebra."""
 
     def __init__(self, params: dict, cfg: ArchConfig, *, edit_capacity: int = 8,
                  row_capacity: int = 64, use_patch_kernel: bool = False,
@@ -136,15 +180,21 @@ class JitIncrementalEngine:
     # ------------------------------------------------------------ full pass
 
     @functools.partial(jax.jit, static_argnums=0)
-    def full_forward(self, tokens: jax.Array, positions: jax.Array) -> JitState:
-        return self._full_forward_impl(tokens, positions)
+    def full_forward(self, tokens: jax.Array, positions: jax.Array,
+                     valid: Optional[jax.Array] = None) -> JitState:
+        """Ingest a slot buffer. ``valid=None`` means every slot is real (the
+        plain fixed-length document of the replace-only path)."""
+        return self._full_forward_impl(tokens, positions, valid)
 
-    def _full_forward_impl(self, tokens: jax.Array, positions: jax.Array) -> JitState:
+    def _full_forward_impl(self, tokens: jax.Array, positions: jax.Array,
+                           valid: Optional[jax.Array] = None) -> JitState:
         m = self.meta
         n = tokens.shape[0]
+        if valid is None:
+            valid = jnp.ones((n,), bool)
+        valid = valid.astype(bool)
         x0 = self.extras["tok_emb"][tokens] + self.extras["pos_emb"][positions]
-        counts = jnp.arange(1, n + 1, dtype=jnp.float32)
-        causal = (jnp.arange(n)[None, :] <= jnp.arange(n)[:, None]).astype(jnp.float32)
+        causal, counts = _order_masks(positions, valid)
 
         def layer(x, Wl):
             h = _ln(x, Wl["ln1_s"], Wl["ln1_b"])
@@ -176,112 +226,185 @@ class JitIncrementalEngine:
             vcs.append(vc); Ts.append(T); cds.append(codes)
         st = lambda l: jnp.stack(l)
         return JitState(tokens.astype(jnp.int32), positions.astype(jnp.int32),
+                        valid, valid.sum(dtype=jnp.int32),
                         st(xs), st(qs), st(ks), st(vs), st(vcs), st(Ts), st(cds))
 
     # ------------------------------------------------------------ edit step
 
     @functools.partial(jax.jit, static_argnums=0)
-    def apply_replaces(self, state: JitState, edit_pos: jax.Array,
-                       edit_tok: jax.Array) -> tuple[JitState, jax.Array]:
-        """edit_pos: [C] int32 (pad with -1); edit_tok: [C] int32.
+    def apply_edits(self, state: JitState, slot: jax.Array, tok: jax.Array,
+                    pos_id: jax.Array, op: jax.Array
+                    ) -> tuple[JitState, jax.Array]:
+        """The generic fixed-shape edit step: up to ``C`` typed edits at once.
+
+        slot:   [C] int32 — target slot (pad unused entries with -1);
+        tok:    [C] int32 — new token (replace/insert; ignored for delete);
+        pos_id: [C] int32 — fresh gapped position id (insert only);
+        op:     [C] int32 — OP_REPLACE / OP_INSERT / OP_DELETE.
+
+        Bucket invariants (the scheduler's job): slots are distinct within a
+        bucket; an insert targets a *free* slot with a position id strictly
+        between its sequence neighbours'; replace/delete target valid slots.
         Returns (new_state, overflow) — overflow=True means the propagation
         bucket R was exceeded at some layer and the result is UNRELIABLE
         (caller must full_forward)."""
-        return self._apply_replaces_impl(state, edit_pos, edit_tok)
+        return self._apply_edits_impl(state, slot, tok, pos_id, op)
 
-    def _apply_replaces_impl(self, state: JitState, edit_pos: jax.Array,
-                             edit_tok: jax.Array) -> tuple[JitState, jax.Array]:
+    @functools.partial(jax.jit, static_argnums=0)
+    def apply_replaces(self, state: JitState, edit_pos: jax.Array,
+                       edit_tok: jax.Array) -> tuple[JitState, jax.Array]:
+        """Replace-only bucket (back-compat surface). edit_pos: [C] int32
+        slot indices (pad with -1); edit_tok: [C] int32."""
+        z = jnp.zeros_like(edit_pos)
+        return self._apply_edits_impl(state, edit_pos, edit_tok, z, z)
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def apply_inserts(self, state: JitState, slot: jax.Array, tok: jax.Array,
+                      pos_id: jax.Array) -> tuple[JitState, jax.Array]:
+        """Insert-only bucket: claim free slots ``slot`` (pad with -1), give
+        them tokens ``tok`` and fresh mid-gap position ids ``pos_id``."""
+        op = jnp.where(slot >= 0, OP_INSERT, 0).astype(jnp.int32)
+        return self._apply_edits_impl(state, slot, tok, pos_id, op)
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def apply_deletes(self, state: JitState,
+                      slot: jax.Array) -> tuple[JitState, jax.Array]:
+        """Delete-only bucket: invalidate slots ``slot`` (pad with -1) and
+        subtract their column contributions."""
+        z = jnp.zeros_like(slot)
+        op = jnp.where(slot >= 0, OP_DELETE, 0).astype(jnp.int32)
+        return self._apply_edits_impl(state, slot, z, z, op)
+
+    def _apply_edits_impl(self, state: JitState, slot: jax.Array,
+                          tok: jax.Array, pos_id: jax.Array, op: jax.Array
+                          ) -> tuple[JitState, jax.Array]:
         m = self.meta
-        C, R = self.C, self.R
+        R = self.R
         n = state.tokens.shape[0]
-        counts = jnp.arange(1, n + 1, dtype=jnp.float32)
-        valid_e = edit_pos >= 0
-        pos_safe = jnp.where(valid_e, edit_pos, 0)
+        valid_e = slot >= 0
+        slot_safe = jnp.where(valid_e, slot, 0)
+        opv = jnp.where(valid_e, op, -1)
+        is_ins = opv == OP_INSERT
+        is_del = opv == OP_DELETE
+        has_new = valid_e & ~is_del  # slot holds a (new) token afterwards
+        had_old = valid_e & ~is_ins  # slot contributed a column before
 
-        tokens = state.tokens.at[pos_safe].set(
-            jnp.where(valid_e, edit_tok, state.tokens[pos_safe]))
-        x_rows = (self.extras["tok_emb"][tokens[pos_safe]]
-                  + self.extras["pos_emb"][state.positions[pos_safe]])
+        # -------- slot metadata: tokens / positions / valid / n_real
+        # Masked bucket entries scatter to index n — out of bounds, so
+        # mode="drop" discards them (NOT -1, which jnp wraps to the last
+        # slot) — no read-modify-write dance, no duplicate-index hazards.
+        drop = jnp.int32(n)
+        tokens = state.tokens.at[jnp.where(has_new, slot, drop)].set(
+            tok, mode="drop")
+        positions = state.positions.at[jnp.where(is_ins, slot, drop)].set(
+            pos_id, mode="drop")
+        # Deleted slots keep their position id: the ΔT patch below still
+        # needs it to address the rows that used to attend the column.
+        valid = state.valid.at[jnp.where(is_ins, slot, drop)].set(
+            True, mode="drop")
+        valid = valid.at[jnp.where(is_del, slot, drop)].set(False, mode="drop")
+        n_real = (state.n_real + is_ins.sum(dtype=jnp.int32)
+                  - is_del.sum(dtype=jnp.int32))
 
-        # dirty bucket for layer 0 = the edit bucket
-        dirty_idx = pos_safe  # [R0 = C]
-        dirty_valid = valid_e
-        dirty_rows = x_rows  # new residual-stream rows at dirty_idx
+        causal, counts = _order_masks(positions, valid)
 
-        new_x = [state.x[0].at[dirty_idx].set(
-            jnp.where(dirty_valid[:, None], dirty_rows, state.x[0][dirty_idx]))]
+        # Inserted slots may hold a stale tenant's activations. Zero their
+        # k/vc across all layers so the "old contribution" the ΔT patch
+        # subtracts is exactly zero (gelu(0)·0 = 0) — the slot-buffer
+        # analogue of the NumPy engine inserting a zero row.
+        ins_slot = jnp.where(is_ins, slot, drop)
+        k_base = state.k.at[:, ins_slot].set(0.0, mode="drop")
+        vc_base = state.vc.at[:, ins_slot].set(0.0, mode="drop")
+
+        # layer-0 dirty bucket = the edit bucket
+        x_rows = (self.extras["tok_emb"][tokens[slot_safe]]
+                  + self.extras["pos_emb"][positions[slot_safe]])
+        new_x = [state.x[0].at[jnp.where(has_new, slot, drop)].set(
+            x_rows, mode="drop")]
+        # rows to recompute this layer (gathered indices + occupancy mask)
+        dirty_idx = slot_safe  # [C]
+        new_mask = has_new
+        # columns to patch this layer. A deleted slot contributes an
+        # old-only column at EVERY layer (its cached k/vc still sit in every
+        # layer's T sums), but it is never a recomputed row — so the column
+        # set is the row set at layer 0 and row-set ∪ delete-slots below.
+        col_idx = slot_safe
+        col_old = had_old  # subtract the old contribution of these columns
+        col_new = has_new  # add the new contribution of these columns
+
         new_q, new_k, new_v, new_vc, new_T, new_codes = [], [], [], [], [], []
         overflow = jnp.asarray(False)
 
         for li in range(self.L):
             Wl = jax.tree.map(lambda a: a[li], self.W)
             x_in = new_x[li]
-            Cd = dirty_idx.shape[0]
-            vmask = dirty_valid
-            # per-location at dirty rows
+            # per-location at dirty rows (garbage lanes are masked out below)
             h = _ln(x_in[dirty_idx], Wl["ln1_s"], Wl["ln1_b"])
             q_n = jnp.einsum("cd,dhe->che", h, Wl["wq"]) + Wl["bq"]
             k_n = jnp.einsum("cd,dhe->che", h, Wl["wk"]) + Wl["bk"]
             v_n = jnp.einsum("cd,dhe->che", h, Wl["wv"]) + Wl["bv"]
             vc_n = jnp.einsum("che,hqe->chq", v_n, Wl["cb_per_head"])
-            k_old = state.k[li][dirty_idx]
-            vc_old = state.vc[li][dirty_idx]
 
-            q_all = state.q[li].at[dirty_idx].set(
-                jnp.where(vmask[:, None, None], q_n, state.q[li][dirty_idx]))
-            k_all = state.k[li].at[dirty_idx].set(
-                jnp.where(vmask[:, None, None], k_n, state.k[li][dirty_idx]))
-            v_all = state.v[li].at[dirty_idx].set(
-                jnp.where(vmask[:, None, None], v_n, state.v[li][dirty_idx]))
-            vc_all = state.vc[li].at[dirty_idx].set(
-                jnp.where(vmask[:, None, None], vc_n, state.vc[li][dirty_idx]))
+            upd = jnp.where(new_mask, dirty_idx, drop)
+            q_all = state.q[li].at[upd].set(q_n, mode="drop")
+            k_all = k_base[li].at[upd].set(k_n, mode="drop")
+            v_all = state.v[li].at[upd].set(v_n, mode="drop")
+            vc_all = vc_base[li].at[upd].set(vc_n, mode="drop")
+            k_old = k_base[li][col_idx]
+            vc_old = vc_base[li][col_idx] * col_old[:, None, None]
+            k_new = k_all[col_idx]
+            vc_new = vc_all[col_idx] * col_new[:, None, None]
 
-            # column patch over ALL rows (masked): ΔT = new − old contributions
+            # column patch over ALL rows: ΔT = new − old contributions.
+            # Column order comes from position ids; rows are masked by the
+            # valid mask so free slots never accumulate patches.
             col_mask = (
-                vmask[None, :]
-                & (dirty_idx[None, :] <= jnp.arange(n)[:, None])
+                (col_old | col_new)[None, :]
+                & (positions[col_idx][None, :] <= positions[:, None])
             ).astype(jnp.float32)  # [n, Cd]
+            row_valid = valid.astype(jnp.float32)
             if self.use_patch_kernel:
                 from repro.kernels.incr_patch import incr_patch
 
                 dT = incr_patch(
                     state.q[li],
-                    k_all[dirty_idx].transpose(1, 0, 2),
+                    k_new.transpose(1, 0, 2),
                     k_old.transpose(1, 0, 2),
-                    vc_all[dirty_idx].transpose(1, 0, 2),
+                    vc_new.transpose(1, 0, 2),
                     vc_old.transpose(1, 0, 2),
                     col_mask,
+                    row_valid=row_valid,
                 )
             else:
-                s_new = jnp.einsum("nhe,che->nhc", state.q[li], k_all[dirty_idx]) * m["scale"]
+                cm = col_mask * row_valid[:, None]
+                s_new = jnp.einsum("nhe,che->nhc", state.q[li], k_new) * m["scale"]
                 s_old = jnp.einsum("nhe,che->nhc", state.q[li], k_old) * m["scale"]
-                dT = jnp.einsum("nhc,chq->nhq", _gelu(s_new) * col_mask[:, None, :],
-                                vc_all[dirty_idx]) - jnp.einsum(
-                    "nhc,chq->nhq", _gelu(s_old) * col_mask[:, None, :], vc_old)
+                dT = jnp.einsum("nhc,chq->nhq", _gelu(s_new) * cm[:, None, :],
+                                vc_new) - jnp.einsum(
+                    "nhc,chq->nhq", _gelu(s_old) * cm[:, None, :], vc_old)
             T_all = state.T[li] + dT
-            # dirty rows: full row recompute
-            causal_rows = (jnp.arange(n)[None, :] <= dirty_idx[:, None]).astype(
-                jnp.float32)  # [Cd, n]
+            # dirty rows: full row recompute (their causal row of the
+            # position-order mask already reflects inserts/deletes)
+            causal_rows = causal[dirty_idx]  # [Cd, n]
             w_rows = _gelu(jnp.einsum("che,jhe->hcj", q_all[dirty_idx], k_all)
                            * m["scale"]) * causal_rows[None]
             T_rows = jnp.einsum("hcj,jhq->chq", w_rows, vc_all)
-            T_all = T_all.at[dirty_idx].set(
-                jnp.where(vmask[:, None, None], T_rows, T_all[dirty_idx]))
+            T_all = T_all.at[upd].set(T_rows, mode="drop")
 
-            # re-quantize all rows (cheap: O(n·Q))
+            # re-quantize all rows (cheap: O(n·Q)); counts renormalization
+            # after inserts/deletes is automatic — counts came from the mask
             s = T_all.reshape(n, m["hq"], m["heads_per_vq"], m["Q"]).sum(2)
             s = s / counts[:, None, None] + Wl["vq_bias"][None]
             codes = jnp.argmax(s, axis=-1).astype(jnp.int32)
 
-            changed = jnp.any(codes != state.codes[li], axis=-1)
-            changed = changed.at[dirty_idx].set(
-                jnp.where(vmask, True, changed[dirty_idx]))
+            changed = jnp.any(codes != state.codes[li], axis=-1) & valid
+            changed = changed.at[upd].set(True, mode="drop")
             n_changed = changed.sum()
             overflow = overflow | (n_changed > R)
 
             # gather up to R changed rows into the next dirty bucket
             scores = jnp.where(changed, 1.0, 0.0)
-            _, next_idx = jax.lax.top_k(scores, R)
+            _, next_idx = jax.lax.top_k(scores, min(R, n))
             next_valid = changed[next_idx]
 
             attn = Wl["bo"][None] + sum(
@@ -292,17 +415,25 @@ class JitIncrementalEngine:
             ffn = _gelu(h2 @ Wl["w_up"] + Wl["b_up"]) @ Wl["w_down"] + Wl["b_down"]
             x_out_rows = x_mid + ffn
 
-            x_next = state.x[li + 1].at[next_idx].set(
-                jnp.where(next_valid[:, None], x_out_rows,
-                          state.x[li + 1][next_idx]))
+            x_next = state.x[li + 1].at[jnp.where(next_valid, next_idx,
+                                                   drop)].set(
+                x_out_rows, mode="drop")
             new_x.append(x_next)
             new_q.append(q_all); new_k.append(k_all); new_v.append(v_all)
             new_vc.append(vc_all); new_T.append(T_all); new_codes.append(codes)
-            dirty_idx, dirty_valid = next_idx, next_valid
+            dirty_idx = next_idx
+            new_mask = next_valid
+            # deeper layers: propagated rows patch old→new; deleted slots
+            # keep riding along as old-only columns
+            col_idx = jnp.concatenate([next_idx, slot_safe])
+            col_old = jnp.concatenate([next_valid, is_del])
+            col_new = jnp.concatenate([next_valid,
+                                       jnp.zeros_like(is_del)])
 
         st = lambda l: jnp.stack(l)
-        return JitState(tokens, state.positions, st(new_x), st(new_q), st(new_k),
-                        st(new_v), st(new_vc), st(new_T), st(new_codes)), overflow
+        return JitState(tokens, positions, valid, n_real, st(new_x), st(new_q),
+                        st(new_k), st(new_v), st(new_vc), st(new_T),
+                        st(new_codes)), overflow
 
     # ------------------------------------------------------------ outputs
 
@@ -312,8 +443,9 @@ class JitIncrementalEngine:
 
     @functools.partial(jax.jit, static_argnums=0)
     def logits_at(self, state: JitState, index: jax.Array) -> jax.Array:
-        """Logits at an arbitrary row — the batched server pads documents to a
-        capacity bucket, so "last token" is ``index = n_real - 1``, not -1."""
+        """Logits at an arbitrary slot — the batched server pads documents to
+        a capacity bucket, so "last token" is the slot holding the
+        largest-position valid row (the host scheduler tracks it), not -1."""
         return self._logits_at_impl(state, index)
 
     def _logits_at_impl(self, state: JitState, index: jax.Array) -> jax.Array:

@@ -118,7 +118,7 @@ def test_capacity_overflow_doubles_to_pow2_and_converges(setup):
     srv.open_document("d", toks)
     for i in range(8):
         srv.submit_replace("d", i, int(rng.integers(cfg.vocab)))
-        toks[i] = srv.docs["d"].pending[-1][1]
+        toks[i] = srv.docs["d"].pending[-1][2]  # (op, pos, tok)
     srv.flush()
     doc = srv.docs["d"]
     assert list(srv.tokens("d")) == toks
@@ -160,7 +160,7 @@ def test_failed_dispatch_restores_queue(setup, monkeypatch):
     monkeypatch.setattr(eng, "batch_apply_replaces", boom)
     with pytest.raises(RuntimeError, match="simulated device failure"):
         srv.step()
-    assert list(srv.docs["d"].pending) == [(2, 9), (5, 4)]
+    assert list(srv.docs["d"].pending) == [("replace", 2, 9), ("replace", 5, 4)]
     assert srv.stats.edits_applied == 0 and srv.stats.batch_steps == 0
     monkeypatch.undo()
     srv.flush()

@@ -1,6 +1,7 @@
 """Sampled positional embeddings and the gap allocator (paper §3.3, App. B)."""
 import jax
 import numpy as np
+import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core.positional import PositionAllocator, sample_positions, spread_positions
@@ -40,3 +41,37 @@ def test_spread_positions_has_gaps():
     pos = spread_positions(10, 1000)
     gaps = np.diff(pos)
     assert gaps.min() >= 99  # ~pool/n spacing for insertions
+
+
+def test_allocator_boundary_gaps():
+    """The allocator's layouts leave room BEFORE the first and AFTER the
+    last token (front-anchored spreads made insert-at-0 unsatisfiable even
+    right after a defrag)."""
+    alloc = PositionAllocator(8, pool_size=64)
+    assert alloc.can_insert_at(0) and alloc.can_insert_at(8)
+    alloc.defragment()
+    assert alloc.can_insert_at(0) and alloc.can_insert_at(len(alloc))
+
+
+def test_allocator_snapshot_restore_and_gap_queries():
+    """The device-friendly API the batch server's rollback path uses."""
+    alloc = PositionAllocator(6, pool_size=64)
+    snap = alloc.snapshot()
+    assert snap.dtype == np.int32 and list(snap) == alloc.positions
+    assert alloc.min_gap() == min(alloc.gap_at(i) for i in range(7))
+    pid = alloc.insert_at(3)
+    assert pid is not None and alloc.positions[3] == pid
+    alloc.delete_at(0)
+    alloc.restore(snap)  # rollback: exactly the snapshotted ids again
+    assert alloc.positions == list(snap)
+    with pytest.raises(ValueError):
+        alloc.restore(snap[::-1])  # not increasing
+    with pytest.raises(ValueError):
+        alloc.restore(np.asarray([0, 99], np.int32))  # outside the pool
+    # exhaustion reporting: a saturated region reports gap 0 / min_gap 0
+    tight = PositionAllocator(4, pool_size=5)
+    while tight.insert_at(1) is not None:
+        pass
+    assert tight.gap_at(1) == 0
+    assert tight.min_gap() == 0
+    assert not tight.can_insert_at(1)
