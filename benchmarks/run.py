@@ -68,6 +68,14 @@ def main():
     edit_mix.run(doc_len=512 if args.full else 128,
                  n_edits=64 if args.full else 16)
 
+    print(f"\n=== Suggestion reuse: continuation decoding over edits "
+          f"({time.time()-t0:.0f}s) ===")
+    from benchmarks import suggest_reuse
+
+    suggest_reuse.run(doc_len=96 if not args.full else 384,
+                      n_edits=24 if not args.full else 64,
+                      n_new=8)
+
     if not args.skip_accuracy:
         print(f"\n=== Table 1: accuracy parity ({time.time()-t0:.0f}s) ===")
         from benchmarks import table1_accuracy

@@ -1,0 +1,142 @@
+"""Suggestion-reuse benchmark: continuation decoding over an edit stream,
+with vs without edited-prefix reuse (ISSUE 3 tentpole).
+
+The writing-assistant loop: a document takes single-token edits; after each
+edit the server refreshes a greedy ``n_new``-token suggestion. The
+``SuggestionEngine`` reuses every decode-cache row before the earliest
+invalidated position and re-prefills only the suffix (power-of-two chunk
+buckets); the baseline is the from-scratch oracle, which re-prefills the
+whole document per refresh.
+
+Workloads (all single-token edits):
+
+* ``typing``  — edits land in the last 8 positions (the tail cursor of a
+  writer typing + correcting): reuse is near-total;
+* ``editing`` — a cursor random-walks with occasional long jumps (70%
+  local, 30% uniform): the realistic mixed case;
+* ``uniform`` — edits uniform over the document: the adversarial floor
+  (expected reuse under the pow2 chunk buckets ≈ 0.37 at doc_len 96).
+
+Emits ``results/BENCH_suggest_reuse.json`` — one record per workload with
+``reused_prefill_fraction`` (reused rows / total rows across refreshes),
+oracle-match booleans, and wall-clock per edit+refresh — plus name,value CSV
+lines like the other benchmarks.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import ensure_results
+
+
+def _edit_pos(rng, kind: str, n: int, cursor: int, workload: str) -> int:
+    if workload == "typing":
+        lo = max(0, n - 8)
+        return int(rng.integers(lo, n + (1 if kind == "insert" else 0)))
+    if workload == "editing":
+        if rng.random() < 0.3:
+            cursor = int(rng.integers(n))
+        else:
+            cursor = int(np.clip(cursor + rng.integers(-3, 4), 0, n - 1))
+        return min(cursor, n if kind == "insert" else n - 1)
+    return int(rng.integers(n + (1 if kind == "insert" else 0)))
+
+
+def run(doc_len: int = 96, n_edits: int = 24, n_new: int = 8,
+        seed: int = 0, check_oracle: bool = True) -> list[dict]:
+    import jax
+
+    from repro.configs.vq_opt_125m import smoke_config
+    from repro.models import transformer as T
+    from repro.serving.batch_server import BatchServer
+    from repro.serving.jit_engine import JitIncrementalEngine
+    from repro.serving.suggest import SuggestionEngine, oracle_suggestion
+
+    cfg = smoke_config(vqt=True)
+    params = jax.device_get(T.init_params(jax.random.PRNGKey(seed), cfg))
+    srv = BatchServer(params, cfg, edit_capacity=4, row_capacity=32,
+                      max_batch=4, min_doc_capacity=16)
+    oracle_eng = JitIncrementalEngine(params, cfg, edit_capacity=4,
+                                      row_capacity=32)
+    oracle_sugg = SuggestionEngine(params, cfg)
+
+    records = []
+    for workload in ("typing", "editing", "uniform"):
+        rng = np.random.default_rng(seed)
+        doc_id = f"w_{workload}"
+        ref = list(rng.integers(0, cfg.vocab, doc_len))
+        srv.open_document(doc_id, ref)
+        srv.suggest(doc_id, n_new)  # initial refresh (cache build)
+        before = srv.suggest_stats
+        rows0 = (before.prefill_rows_reused, before.prefill_rows_recomputed)
+        cursor = doc_len - 1
+        matches = []
+        t_refresh = t_oracle = 0.0
+        for _ in range(n_edits):
+            kind = str(rng.choice(["replace", "insert", "delete"],
+                                  p=[0.7, 0.2, 0.1]))
+            n = len(ref)
+            if kind == "delete" and n <= 2:
+                kind = "replace"
+            pos = _edit_pos(rng, kind, n, cursor, workload)
+            cursor = pos
+            tok = int(rng.integers(cfg.vocab))
+            if kind == "replace":
+                srv.submit_replace(doc_id, pos, tok)
+                ref[pos] = tok
+            elif kind == "insert":
+                srv.submit_insert(doc_id, pos, tok)
+                ref.insert(pos, tok)
+            else:
+                srv.submit_delete(doc_id, pos)
+                del ref[pos]
+            t0 = time.perf_counter()
+            sugg = srv.suggest(doc_id, n_new)
+            t_refresh += time.perf_counter() - t0
+            if check_oracle:
+                doc = srv.docs[doc_id]
+                t0 = time.perf_counter()
+                ora = oracle_suggestion(params, cfg, oracle_eng, doc.tokens,
+                                        doc.positions, doc.valid, n_new,
+                                        suggester=oracle_sugg)
+                t_oracle += time.perf_counter() - t0
+                matches.append(bool(np.array_equal(sugg, ora)))
+        after = srv.suggest_stats
+        reused = after.prefill_rows_reused - rows0[0]
+        recomputed = after.prefill_rows_recomputed - rows0[1]
+        total = reused + recomputed
+        rec = {
+            "workload": workload,
+            "doc_len": doc_len,
+            "n_edits": n_edits,
+            "n_new": n_new,
+            "prefill_rows_reused": int(reused),
+            "prefill_rows_recomputed": int(recomputed),
+            "reused_prefill_fraction": reused / max(total, 1),
+            "full_recompute_rows": int(len(ref) * n_edits),
+            "suggestions_match_oracle": (all(matches) if matches else None),
+            # includes the edit dispatch itself (suggest() flushes first);
+            # the oracle column is the bare from-scratch decode
+            "edit_and_refresh_ms_mean": 1e3 * t_refresh / n_edits,
+            "oracle_ms_mean": (1e3 * t_oracle / n_edits if check_oracle
+                               else None),
+        }
+        records.append(rec)
+        print(f"suggest_reuse,{workload},reused_fraction,"
+              f"{rec['reused_prefill_fraction']:.3f}")
+        print(f"suggest_reuse,{workload},refresh_ms,"
+              f"{rec['edit_and_refresh_ms_mean']:.2f}")
+
+    out = os.path.join(ensure_results(), "BENCH_suggest_reuse.json")
+    with open(out, "w") as f:
+        json.dump(records, f, indent=2)
+    print(f"suggest_reuse,written,{out}")
+    return records
+
+
+if __name__ == "__main__":
+    run()

@@ -282,6 +282,59 @@ def attn_decode(
     return o, new_cache
 
 
+def attn_prefill(
+    params: dict,
+    cfg: ArchConfig,
+    layer: LayerCfg,
+    x: jax.Array,
+    cache: dict,
+    positions: jax.Array,
+) -> tuple[jax.Array, dict]:
+    """Chunked prefill: append ``m`` tokens to a KV cache in ONE step.
+
+    x: [b, m, d]; positions: [b, m]. The chunk's keys/values are written at
+    cache slots ``len .. len+m-1`` and each chunk token attends causally —
+    cache slot j is visible to chunk token i iff ``j <= len + i``. With
+    ``m == 1`` this is exactly ``attn_decode``'s masking, so a chunked
+    prefill followed by one-token decode steps is the same computation as
+    feeding every token through ``attn_decode`` (the property the
+    suggestion-serving differential tests rely on).
+
+    Requires a full (non-ring) cache: windowed layers keep their
+    ring-buffer semantics only under one-token decode. The caller must
+    guarantee ``len + m <= S`` (``jax.lax.dynamic_update_slice`` clamps
+    out-of-range starts, which would silently corrupt the cache).
+    """
+    b, m, _ = x.shape
+    if layer.window is not None:
+        raise ValueError("chunked prefill requires a non-windowed layer "
+                         "(ring caches only support one-token decode)")
+    q, k_new, v_new = _qkv(params, cfg, x)
+    if cfg.pos == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k_new = apply_rope(k_new, positions, cfg.rope_theta)
+    S = cache["k"].shape[1]
+    start = cache["len"]  # [b]
+    k = jax.vmap(lambda c, kn, s: jax.lax.dynamic_update_slice(c, kn, (s, 0, 0)))(
+        cache["k"], k_new.astype(cache["k"].dtype), start
+    )
+    v = jax.vmap(lambda c, vn, s: jax.lax.dynamic_update_slice(c, vn, (s, 0, 0)))(
+        cache["v"], v_new.astype(cache["v"].dtype), start
+    )
+    k = constrain(k, "batch", "seq", "model", None)
+    v = constrain(v, "batch", "seq", "model", None)
+    qi = start[:, None] + jnp.arange(m)[None, :]  # [b, m] absolute order index
+    ki = jnp.arange(S)
+    mask = (ki[None, None, :] <= qi[:, :, None]).astype(jnp.float32)[:, None]
+    o = attention_core(q, k, v, mask, softmax=cfg.attn_softmax)
+    if "vq" in params:
+        o, _ = vq_mod.quantize(params["vq"], o)
+    o = o @ params["wo"]
+    if "bo" in params:
+        o = o + params["bo"]
+    return o, {"k": k, "v": v, "len": start + m}
+
+
 def attn_cache_init(cfg: ArchConfig, layer: LayerCfg, batch: int, seq_len: int,
                     dtype=jnp.bfloat16) -> dict:
     S = min(layer.window, seq_len) if layer.window is not None else seq_len

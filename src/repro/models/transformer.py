@@ -22,7 +22,13 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig, LayerCfg
 from repro.distributed.context import constrain
 from repro.models import rwkv6 as rwkv_mod
-from repro.models.attention import attn_apply, attn_cache_init, attn_decode, attn_init
+from repro.models.attention import (
+    attn_apply,
+    attn_cache_init,
+    attn_decode,
+    attn_init,
+    attn_prefill,
+)
 from repro.models.embedding import embed_tokens, embedding_init, merge_vision
 from repro.models.ffn import ffn_apply, ffn_init
 from repro.models.hymba import hymba_apply, hymba_cache_init, hymba_decode, hymba_init
@@ -310,6 +316,150 @@ def _layer_decode(
     else:
         y = ffn_apply(layer.ffn, lp["ffn"], h2)
     return x + y, mc
+
+
+def chunkable(cfg: ArchConfig) -> bool:
+    """Whether ``prefill_step`` supports this config: plain-token GQA stacks
+    with no sliding windows and no stateful (rwkv_cm) FFNs. Other mixers
+    keep per-token recurrent/ring state that a multi-token chunk cannot
+    update in one fixed-shape write."""
+    return (
+        cfg.input_mode == "tokens"
+        and cfg.n_codebooks == 1
+        and all(
+            layer.mixer == "gqa" and layer.window is None and layer.ffn != "rwkv_cm"
+            for layer in cfg.layer_list()
+        )
+    )
+
+
+def _layer_prefill(
+    lp: dict,
+    cfg: ArchConfig,
+    layer: LayerCfg,
+    x: jax.Array,
+    cache: dict,
+    positions: jax.Array,
+) -> tuple[jax.Array, dict]:
+    h = apply_norm(cfg.norm, lp["norm1"], x)
+    mix, mc = attn_prefill(lp["mixer"], cfg, layer, h, cache["mix"], positions)
+    x = x + mix
+    h2 = apply_norm(cfg.norm, lp["norm2"], x)
+    if layer.ffn == "moe":
+        y, _ = moe_apply(lp["ffn"], cfg, h2)
+    else:
+        y = ffn_apply(layer.ffn, lp["ffn"], h2)
+    return x + y, mc
+
+
+def prefill_step(
+    params: dict,
+    cfg: ArchConfig,
+    tokens: jax.Array,
+    caches: list,
+    positions: jax.Array,
+) -> tuple[jax.Array, list]:
+    """``m`` new tokens per sequence in ONE fixed-shape step (the batched
+    prefill that ``decode_step`` is the m=1 special case of). tokens /
+    positions: [b, m]. Returns (logits [b, m, vocab], new caches). Only
+    ``chunkable`` configs (non-windowed GQA over plain tokens) are
+    supported — exactly the VQT serving shape."""
+    if not chunkable(cfg):
+        raise ValueError(
+            f"{cfg.name}: chunked prefill requires non-windowed gqa layers "
+            "over plain tokens — use per-token decode_step instead")
+    x = embed_tokens(params["embed"], cfg, tokens, positions)
+    x = constrain(x, "batch", None, None)
+    new_caches = []
+    for (pattern, repeat), sp, sc in zip(cfg.stages, params["stages"], caches):
+
+        def body_wrap(xc, inp, _pattern=pattern):
+            spi, sci = inp
+            new_sci = []
+            for pi, layer in enumerate(_pattern):
+                xc, mc = _layer_prefill(spi[pi], cfg, layer, xc, sci[pi], positions)
+                new_sci.append({"mix": mc})
+            return xc, tuple(new_sci)
+
+        if repeat == 1:
+            x, nc = body_wrap(
+                x, (jax.tree.map(lambda a: a[0], sp), jax.tree.map(lambda a: a[0], sc))
+            )
+            nc = jax.tree.map(lambda a: a[None], nc)
+        else:
+            x, nc = jax.lax.scan(body_wrap, x, (sp, sc))
+        new_caches.append(nc)
+    logits = _head(params, cfg, x)
+    return logits, new_caches
+
+
+def caches_from_kv(
+    cfg: ArchConfig,
+    k: jax.Array,
+    v: jax.Array,
+    length: jax.Array,
+    *,
+    seq_len: Optional[int] = None,
+    dtype=jnp.float32,
+) -> list:
+    """Build decode caches from per-layer stacked K/V — e.g. the jit
+    engine's ``export_kv`` (DESIGN.md §5).
+
+    k, v: [L, b, S0, Hkv, dh] sequence-ordered cached keys/values (rows
+    beyond each document's real length may hold garbage — the cache
+    ``length`` masks them). length: [b] int32 — how many leading rows to
+    trust; rows at/after it are expected to be re-prefilled. ``seq_len``
+    pads the cache beyond S0 to leave room for continuation tokens."""
+    layers = cfg.layer_list()
+    if k.shape[0] != len(layers):
+        raise ValueError(f"k carries {k.shape[0]} layers, config has {len(layers)}")
+    b, S0 = k.shape[1], k.shape[2]
+    S = seq_len if seq_len is not None else S0
+    if S < S0:
+        raise ValueError(f"seq_len {S} smaller than exported rows {S0}")
+    length = jnp.asarray(length, jnp.int32).reshape(b)
+    caches = []
+    li = 0
+    for pattern, repeat in cfg.stages:
+        per_repeat = []
+        for _ in range(repeat):
+            per_layer = []
+            for layer in pattern:
+                if layer.mixer != "gqa" or layer.window is not None:
+                    raise ValueError(
+                        "caches_from_kv supports non-windowed gqa layers only")
+                Hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+                kb = jnp.zeros((b, S, Hkv, dh), dtype)
+                vb = jnp.zeros((b, S, Hkv, dh), dtype)
+                kb = kb.at[:, :S0].set(k[li].astype(dtype))
+                vb = vb.at[:, :S0].set(v[li].astype(dtype))
+                per_layer.append({"mix": {"k": kb, "v": vb, "len": length}})
+                li += 1
+            per_repeat.append(tuple(per_layer))
+        caches.append(jax.tree.map(lambda *a: jnp.stack(a), *per_repeat))
+    return caches
+
+
+def set_cache_length(caches: list, length) -> list:
+    """Rewind (or advance) every layer's cache length counter — the
+    suggestion engine's prefix-reuse primitive: rows at/after ``length``
+    become invisible to attention and are overwritten by the next
+    prefill/decode writes. Full (non-ring) caches only: lengths are
+    absolute slot counts there."""
+
+    def _rec(node):
+        if isinstance(node, dict):
+            return {
+                key: (jnp.full_like(val, length) if key == "len" else _rec(val))
+                for key, val in node.items()
+            }
+        if isinstance(node, tuple):
+            return tuple(_rec(x) for x in node)
+        if isinstance(node, list):
+            return [_rec(x) for x in node]
+        return node
+
+    return _rec(caches)
 
 
 def decode_step(

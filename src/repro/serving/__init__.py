@@ -1,9 +1,12 @@
 from repro.serving.engine import IncrementalServer, ServerStats
-from repro.serving.decode import make_serve_step
+from repro.serving.decode import greedy_decode, make_serve_step
 from repro.serving.jit_engine import (
-    JitIncrementalEngine, JitState, OP_DELETE, OP_INSERT, OP_REPLACE,
+    JitIncrementalEngine, JitState, KVExport, OP_DELETE, OP_INSERT, OP_REPLACE,
 )
 from repro.serving.batch_engine import (
     BatchedJitEngine, BatchedJitState, stack_states, unstack_state,
 )
 from repro.serving.batch_server import BatchServer, BatchStats, next_pow2
+from repro.serving.suggest import (
+    PositionHeadroomError, SuggestionEngine, SuggestStats, oracle_suggestion,
+)

@@ -39,7 +39,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.serving.jit_engine import JitIncrementalEngine, JitState
+from repro.serving.jit_engine import JitIncrementalEngine, JitState, KVExport
 
 # A JitState whose every leaf carries a leading [B] document axis.
 BatchedJitState = JitState
@@ -113,6 +113,15 @@ class BatchedJitEngine(JitIncrementalEngine):
         z = jnp.zeros_like(slot)
         op = jnp.where(slot >= 0, OP_DELETE, 0).astype(slot.dtype)
         return self.batch_apply_edits(state, slot, z, z, op)
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def batch_export_kv(self, state: BatchedJitState) -> KVExport:
+        """Position-ordered KV export for every document in the batch in one
+        fused gather: each ``KVExport`` leaf gains a leading [B] axis.
+        Parity-tested against the per-document ``export_kv`` — the batched
+        entry point for a future bucket-batched suggestion refresh (the
+        current scheduler exports per document as it refreshes)."""
+        return jax.vmap(self._export_kv_impl)(state)
 
     @functools.partial(jax.jit, static_argnums=0)
     def batch_logits_at(self, state: BatchedJitState,

@@ -29,7 +29,14 @@ The serving model (ROADMAP north star: heavy concurrent traffic):
    **fallback** (its batched slice is discarded) and its row capacity ``R``
    doubles — capped at ``n_cap``, at which point overflow is impossible —
    moving it to a bigger bucket whose first dispatch re-jits (the classic
-   capacity-doubling / re-jit serving policy).
+   capacity-doubling / re-jit serving policy);
+6. clients may ``submit_suggest`` a standing **suggestion subscription**:
+   each scheduling round keeps a greedy continuation of the document fresh
+   through ``repro.serving.suggest.SuggestionEngine`` (KV export + re-prefill
+   from the earliest invalidated position, DESIGN.md §5). A newer edit for
+   the same document invalidates its pending suggestion; the refresh waits
+   until the edits apply and then reuses every cache row before the
+   earliest edited position id.
 
 Scheduler invariants (property-tested in tests/test_batch_scheduler.py):
 every submitted edit is applied exactly once; all bucket capacities
@@ -70,6 +77,9 @@ from repro.serving.batch_engine import (
 from repro.serving.jit_engine import (
     JitState, OP_DELETE, OP_INSERT, OP_REPLACE,
 )
+from repro.serving.suggest import (
+    PositionHeadroomError, SuggestionEngine, SuggestStats,
+)
 
 
 _OPCODE = {"replace": OP_REPLACE, "insert": OP_INSERT, "delete": OP_DELETE}
@@ -87,6 +97,8 @@ class BatchStats:
     defrags: int = 0  # gap exhaustion -> position-id re-spread
     grows: int = 0  # slot buffer full -> n_cap doubling
     rejits: int = 0  # distinct dispatch shapes traced
+    suggest_refreshes: int = 0  # suggestion recomputes served
+    suggest_invalidations: int = 0  # fresh suggestions staled by newer edits
 
     @property
     def mean_batch(self) -> float:
@@ -107,6 +119,12 @@ class _BatchDoc:
     state: JitState  # device state at padded shape
     pending: deque = field(default_factory=deque)  # FIFO of (op, pos, tok)
     n_virtual: int = 0  # length after every queued edit applies
+    # ---- suggestion serving (DESIGN.md §5)
+    suggestion: Optional[np.ndarray] = None  # last refreshed continuation
+    suggest_n: int = 0  # standing request length (0 = no subscription)
+    suggest_fresh: bool = False  # suggestion matches the current doc + queue
+    invalid_from: Optional[int] = None  # min pid edited since last refresh
+    touched_from: Optional[int] = None  # min pid touched since last ingest
 
     @property
     def n(self) -> int:  # real length
@@ -144,6 +162,19 @@ class BatchServer:
         self._shapes_seen: set = set()
         self.docs: dict[str, _BatchDoc] = {}
         self.stats = BatchStats()
+        self._sugg: Optional[SuggestionEngine] = None
+        self._params = params
+
+    @property
+    def suggester(self) -> SuggestionEngine:
+        """The (lazily built) suggestion engine shared by every document."""
+        if self._sugg is None:
+            self._sugg = SuggestionEngine(self._params, self.cfg)
+        return self._sugg
+
+    @property
+    def suggest_stats(self) -> SuggestStats:
+        return self.suggester.stats
 
     # ------------------------------------------------------------- engines
 
@@ -236,6 +267,21 @@ class BatchServer:
         if not 0 <= tok < self.cfg.vocab:
             raise ValueError(f"token {tok} outside vocab of {self.cfg.vocab}")
 
+    def _stale(self, doc: _BatchDoc) -> None:
+        """A newer edit for the document invalidates its suggestion."""
+        if doc.suggest_fresh:
+            doc.suggest_fresh = False
+            self.stats.suggest_invalidations += 1
+
+    def _touch(self, doc: _BatchDoc, pid: int) -> None:
+        """Record an applied edit's position id in the invalidation
+        watermarks (earliest-invalidated-position tracking, DESIGN.md §5)."""
+        pid = int(pid)
+        doc.invalid_from = (pid if doc.invalid_from is None
+                            else min(doc.invalid_from, pid))
+        doc.touched_from = (pid if doc.touched_from is None
+                            else min(doc.touched_from, pid))
+
     def submit_replace(self, doc_id: str, pos: int, tok: int) -> None:
         doc = self.docs[doc_id]
         if not 0 <= pos < doc.n_virtual:
@@ -243,6 +289,7 @@ class BatchServer:
                 f"pos {pos} out of range for doc of length {doc.n_virtual}")
         self._check_tok(tok)
         doc.pending.append(("replace", int(pos), int(tok)))
+        self._stale(doc)
         self.stats.edits_submitted += 1
 
     def submit_insert(self, doc_id: str, pos: int, tok: int) -> None:
@@ -256,6 +303,7 @@ class BatchServer:
         self._check_tok(tok)
         doc.pending.append(("insert", int(pos), int(tok)))
         doc.n_virtual += 1
+        self._stale(doc)
         self.stats.edits_submitted += 1
 
     def submit_delete(self, doc_id: str, pos: int) -> None:
@@ -267,6 +315,7 @@ class BatchServer:
             raise ValueError("cannot delete the last remaining token")
         doc.pending.append(("delete", int(pos), 0))
         doc.n_virtual -= 1
+        self._stale(doc)
         self.stats.edits_submitted += 1
 
     def submit_edit(self, doc_id: str, e: Edit) -> None:
@@ -287,12 +336,14 @@ class BatchServer:
         return (doc.tokens.copy(), doc.valid.copy(), doc.positions.copy(),
                 list(doc.slots), list(doc.free), doc.n_cap, doc.row_capacity,
                 doc.allocator.snapshot(), doc.state, deque(doc.pending),
-                doc.n_virtual)
+                doc.n_virtual, doc.invalid_from, doc.touched_from,
+                doc.suggest_fresh)
 
     def _restore(self, doc: _BatchDoc, snap: tuple) -> None:
         (doc.tokens, doc.valid, doc.positions, doc.slots, doc.free, doc.n_cap,
          doc.row_capacity, alloc_ids, doc.state, doc.pending,
-         doc.n_virtual) = snap
+         doc.n_virtual, doc.invalid_from, doc.touched_from,
+         doc.suggest_fresh) = snap
         doc.allocator.restore(alloc_ids)
 
     # ------------------------------------------------------------- scheduling
@@ -331,6 +382,7 @@ class BatchServer:
                 tok_a[i] = tok
                 pos_a[i] = doc.positions[s]
                 doc.tokens[s] = tok
+                self._touch(doc, doc.positions[s])
                 i += 1
             for item in reversed(kept):
                 doc.pending.appendleft(item)
@@ -362,6 +414,7 @@ class BatchServer:
                 slot_a[i] = s
                 tok_a[i] = tok
                 pos_a[i] = pid
+                self._touch(doc, pid)
                 i += 1
         else:  # delete
             while doc.pending and i < self.C:
@@ -374,13 +427,16 @@ class BatchServer:
                 pos_a[i] = doc.positions[s]
                 slot_a[i] = s
                 doc.free.append(s)  # earliest reuse is the NEXT dispatch
+                self._touch(doc, doc.positions[s])
                 i += 1
         return kind, (slot_a, tok_a, pos_a, op_a), i
 
     def step(self) -> int:
-        """One scheduling round; returns the number of edits applied."""
+        """One scheduling round: edit dispatches, then stale suggestion
+        refreshes. Returns the number of edits applied."""
         ready = [d for d in self.docs.values() if d.pending]
         if not ready:
+            self._refresh_suggestions()
             return 0
         takes = []  # (doc, kind, arrays, count)
         undone: dict[int, tuple] = {}  # id(doc) -> (doc, snapshot)
@@ -415,13 +471,17 @@ class BatchServer:
             for d, snap in undone.values():
                 self._restore(d, snap)
             raise
+        self._refresh_suggestions()
         return applied
 
     def flush(self) -> int:
-        """Drain every queue; returns total edits applied."""
+        """Drain every queue; returns total edits applied. Stale suggestion
+        subscriptions are refreshed too — also when there were no edits to
+        drain (the subscribe-then-flush flow)."""
         total = 0
         while self.pending_count():
             total += self.step()
+        self._refresh_suggestions()  # no-op when every subscription is fresh
         return total
 
     def _dispatch(self, chunk: list, n_cap: int, C: int, R: int,
@@ -473,6 +533,9 @@ class BatchServer:
         doc.state = eng.full_forward(jnp.asarray(doc.tokens),
                                      jnp.asarray(doc.positions),
                                      jnp.asarray(doc.valid))
+        # the state is a from-scratch full forward again: every exported
+        # column is trustworthy for suggestion KV reuse
+        doc.touched_from = None
         self.stats.full_forwards += 1
         self._count_shape(("full", doc.n_cap))
 
@@ -499,6 +562,8 @@ class BatchServer:
         doc.free.extend(range(new_cap - 1, old_cap - 1, -1))
         doc.n_cap = new_cap
         self.stats.grows += 1
+        if self._sugg is not None:  # capacity changed: cache shape unusable
+            self._sugg.drop(doc.doc_id)
         self._reingest(doc)
 
     def _defrag(self, doc: _BatchDoc) -> None:
@@ -509,7 +574,80 @@ class BatchServer:
         doc.allocator.defragment()
         doc.positions[np.asarray(doc.slots, np.int64)] = doc.allocator.snapshot()
         self.stats.defrags += 1
+        if self._sugg is not None:  # every position id changed: nothing in
+            self._sugg.drop(doc.doc_id)  # the doc's decode cache is reusable
+        doc.invalid_from = 0
+        self._stale(doc)
         self._reingest(doc)
+
+    # ------------------------------------------------------------ suggestions
+
+    def submit_suggest(self, doc_id: str, n_new: int = 8) -> None:
+        """Open a standing suggestion subscription: after every scheduling
+        round, the document's greedy ``n_new``-token continuation is kept
+        fresh (refreshed whenever edits made it stale, reusing every cache
+        row before the earliest invalidated position). Cancel with
+        ``cancel_suggest``."""
+        doc = self.docs[doc_id]
+        if n_new < 1:
+            raise ValueError("n_new must be >= 1")
+        if doc.suggest_n != n_new:
+            doc.suggest_n = int(n_new)
+            doc.suggest_fresh = False
+
+    def cancel_suggest(self, doc_id: str) -> None:
+        doc = self.docs[doc_id]
+        doc.suggest_n = 0
+        doc.suggestion = None
+        doc.suggest_fresh = False
+
+    def suggestion(self, doc_id: str) -> Optional[np.ndarray]:
+        """The last refreshed continuation, or None while it is stale
+        (a newer edit arrived and the next round has not served it yet)."""
+        doc = self.docs[doc_id]
+        return doc.suggestion.copy() if doc.suggest_fresh else None
+
+    def suggest(self, doc_id: str, n_new: int = 8) -> np.ndarray:
+        """Flush the document's pending edits and return a fresh greedy
+        continuation (subscribing the document if it was not already)."""
+        self.submit_suggest(doc_id, n_new)
+        self.flush()
+        doc = self.docs[doc_id]
+        if not doc.suggest_fresh:
+            self._refresh_doc(doc)
+        return doc.suggestion.copy()
+
+    def _refresh_suggestions(self) -> None:
+        """Serve stale suggestion subscriptions, grouped by capacity bucket
+        (the same grouping the edit dispatcher uses, so refreshes ride the
+        scheduling round). A document with queued edits stays stale — its
+        pending suggestion was invalidated by the newer edits and refreshes
+        only after they apply."""
+        ready = [d for d in self.docs.values()
+                 if d.suggest_n > 0 and not d.suggest_fresh and not d.pending]
+        for doc in sorted(ready, key=lambda d: (d.n_cap, d.doc_id)):
+            self._refresh_doc(doc)
+
+    def _refresh_doc(self, doc: _BatchDoc) -> None:
+        sugg = self.suggester
+        eng = self.engine(self.C, self.R)
+        try:
+            toks = sugg.refresh(
+                eng, doc.state, key=doc.doc_id, n_new=doc.suggest_n,
+                invalid_from=doc.invalid_from,
+                export_invalid_from=doc.touched_from)
+        except PositionHeadroomError:
+            # the tail gap is exhausted: re-spread the ids (a scheduled
+            # defrag + full-forward re-ingest) and retry once
+            self._defrag(doc)
+            toks = sugg.refresh(
+                eng, doc.state, key=doc.doc_id, n_new=doc.suggest_n,
+                invalid_from=doc.invalid_from,
+                export_invalid_from=doc.touched_from)
+        doc.suggestion = toks
+        doc.suggest_fresh = True
+        doc.invalid_from = None
+        self.stats.suggest_refreshes += 1
 
     # ------------------------------------------------------------- outputs
 

@@ -34,24 +34,52 @@ def make_serve_step(cfg: ArchConfig, *, sample: bool = False, temperature: float
     return serve_step
 
 
+def greedy_continue(step, params, caches, logits_last: jax.Array,
+                    gen_positions: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """The greedy continuation inner loop shared by ``greedy_decode`` and
+    the suggestion engine: ``logits_last`` [b, vocab] (audio [b, cb, vocab])
+    are the logits of the last consumed token; ``gen_positions`` [b, n_new]
+    the continuation position ids. Runs ``n_new - 1`` decode steps (the
+    first token needs none). Returns (tokens [b, n_new], caches)."""
+    n_new = gen_positions.shape[1]
+    cur = jnp.argmax(logits_last, axis=-1).astype(jnp.int32)[:, None]
+    out = [cur]
+    for i in range(1, n_new):
+        logits, caches = step(params, caches, cur, gen_positions[:, i - 1 : i])
+        cur = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        out.append(cur)
+    return jnp.concatenate(out, axis=1), caches
+
+
 def greedy_decode(params, cfg: ArchConfig, prompt: jax.Array, n_new: int,
-                  cache_len: int = 0):
+                  cache_len: int = 0, positions: Optional[jax.Array] = None,
+                  gen_positions: Optional[jax.Array] = None):
     """Reference greedy decoding loop for tests/examples: prefill the prompt
-    token-by-token, then generate ``n_new`` tokens. prompt: [b, n]."""
-    b, n = prompt.shape
-    caches = T.init_caches(cfg, b, n + n_new, dtype=jnp.float32)
+    in ONE batched ``prefill_step`` (configs whose decode cache supports
+    chunked writes — else a per-token fallback), then generate ``n_new``
+    tokens. prompt: [b, n] (audio [b, n, cb]).
+
+    ``positions`` ([b, n]) / ``gen_positions`` ([b, n_new]) override the
+    default dense 0..n+n_new-1 position ids — gapped-id documents (the
+    paper's sampled positional embeddings) pass their own. Returns
+    (generated [b, n_new], caches)."""
+    b, n = prompt.shape[:2]
+    if cache_len and cache_len < n + n_new:
+        # full (non-ring) caches clamp out-of-range writes: generating past
+        # the cache end would silently stomp the last KV row
+        raise ValueError(f"cache_len {cache_len} < prompt + n_new = {n + n_new}")
+    caches = T.init_caches(cfg, b, cache_len or (n + n_new), dtype=jnp.float32)
     step = jax.jit(make_serve_step(cfg, sample=False))
-    tok = prompt[:, :1] if cfg.n_codebooks == 1 else prompt[:, :1]
-    out = []
-    cur = None
-    for i in range(n + n_new):
-        pos = jnp.full((b, 1), i, jnp.int32)
-        if i < n:
-            cur = prompt[:, i : i + 1]
-        logits, caches = step(params, caches, cur, pos)
-        cur = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        if cur.ndim == 3:  # audio: [b, 1, cb]
-            pass
-        if i >= n - 1:
-            out.append(cur)
-    return jnp.concatenate(out[:n_new], axis=1), caches
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (b, n))
+    if gen_positions is None:
+        gen_positions = positions[:, -1:] + 1 + jnp.arange(n_new, dtype=jnp.int32)
+    if T.chunkable(cfg):
+        prefill = jax.jit(lambda p, c, t, pos: T.prefill_step(p, cfg, t, c, pos))
+        logits, caches = prefill(params, caches, prompt, positions)
+        logits = logits[:, -1:]
+    else:
+        for i in range(n):
+            logits, caches = step(params, caches, prompt[:, i : i + 1],
+                                  positions[:, i : i + 1])
+    return greedy_continue(step, params, caches, logits[:, -1], gen_positions)

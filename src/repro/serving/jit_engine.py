@@ -91,6 +91,30 @@ class JitState(NamedTuple):
     codes: jax.Array  # [L, n_cap, hq]
 
 
+class KVExport(NamedTuple):
+    """Position-ordered view of a slot buffer's cached keys/values — the
+    bridge from the incremental engine to a standard decode KV cache
+    (DESIGN.md §5 "suggestion serving").
+
+    All arrays keep the fixed ``n_cap`` extent (jit-friendly): the first
+    ``n_real`` rows are the document's valid slots in sequence (position-id)
+    order, the tail rows are invalid slots' garbage — a decode cache built
+    from this export masks them with its length counter. Every layer column
+    the incremental passes left untouched is bit-exact against the
+    document's last full forward; touched columns are float-close (the ΔT
+    patch accumulates in a different order), which is why the suggestion
+    engine re-prefills from the earliest invalidated position instead of
+    trusting them bitwise.
+    """
+
+    tokens: jax.Array  # [n_cap] int32, sequence-ordered (valid rows first)
+    positions: jax.Array  # [n_cap] int32
+    order: jax.Array  # [n_cap] int32 — slot index per sequence rank
+    k: jax.Array  # [L, n_cap, H, dh] sequence-ordered cached keys
+    v: jax.Array  # [L, n_cap, H, dh] sequence-ordered cached values
+    n_real: jax.Array  # [] int32 — rows 0..n_real-1 are real
+
+
 def _weights_from_params(params: dict, cfg: ArchConfig):
     """Flatten stage params into per-layer stacked arrays (the engine's
     LayerWeights, vectorized over L)."""
@@ -434,6 +458,31 @@ class JitIncrementalEngine:
         return JitState(tokens, positions, valid, n_real, st(new_x), st(new_q),
                         st(new_k), st(new_v), st(new_vc), st(new_T),
                         st(new_codes)), overflow
+
+    # ------------------------------------------------------------ kv export
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def export_kv(self, state: JitState) -> KVExport:
+        """Gather the slot buffer's cached k/v into sequence order — the
+        ``JitState -> KV cache`` bridge for continuation ("suggestion")
+        decoding. One fixed-shape gather; see ``KVExport`` for the
+        exactness contract."""
+        return self._export_kv_impl(state)
+
+    def _export_kv_impl(self, state: JitState) -> KVExport:
+        # Invalid slots sort last: their position ids may hold the pool
+        # sentinel (which a valid slot could in principle share), so the
+        # sort key is lifted above every real id instead of trusting it.
+        big = jnp.iinfo(jnp.int32).max
+        order = jnp.argsort(jnp.where(state.valid, state.positions, big))
+        return KVExport(
+            tokens=state.tokens[order],
+            positions=state.positions[order],
+            order=order.astype(jnp.int32),
+            k=jnp.take(state.k, order, axis=1),
+            v=jnp.take(state.v, order, axis=1),
+            n_real=state.n_real,
+        )
 
     # ------------------------------------------------------------ outputs
 

@@ -49,6 +49,59 @@ def test_incr_patch_batched_matches_per_doc(B, R, H, dh, C, Q):
                                    atol=1e-5, rtol=1e-5)
 
 
+@pytest.mark.parametrize(
+    "B,R,H,dh,C,Q",
+    [(2, 13, 3, 24, 5, 48), (3, 9, 2, 16, 3, 40), (1, 130, 5, 48, 7, 96)],
+)
+def test_incr_patch_batched_matches_ref_odd_shapes(B, R, H, dh, C, Q):
+    """The batch-grid kernel vs the pure-jnp oracle on non-power-of-two /
+    odd row, column, head and codebook extents (the row axis is the only
+    padded one — every other extent must be handled at its exact size)."""
+    ks = jax.random.split(jax.random.PRNGKey(B + R + C), 6)
+    q = jax.random.normal(ks[0], (B, R, H, dh))
+    k_new = jax.random.normal(ks[1], (B, H, C, dh))
+    k_old = jax.random.normal(ks[2], (B, H, C, dh))
+    vc_new = jax.random.normal(ks[3], (B, H, C, Q))
+    vc_old = jax.random.normal(ks[4], (B, H, C, Q))
+    mask = jax.random.bernoulli(ks[5], 0.6, (B, R, C))
+    out = incr_patch_batched(q, k_new, k_old, vc_new, vc_old, mask, block_r=8)
+    assert out.shape == (B, R, H, Q)
+    for b in range(B):
+        ref = incr_patch_ref(q[b], k_new[b], k_old[b], vc_new[b], vc_old[b],
+                             mask[b].astype(jnp.float32))
+        np.testing.assert_allclose(np.asarray(out[b]), np.asarray(ref),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_incr_patch_batched_all_masked_rows_are_zero():
+    """Rows whose mask (or slot-buffer ``row_valid``) is entirely zero must
+    receive an exactly-zero patch — the guarantee the slot-buffer engine
+    relies on so free/deleted slots never accumulate ΔT."""
+    B, R, H, dh, C, Q = 2, 11, 2, 16, 4, 32
+    ks = jax.random.split(jax.random.PRNGKey(5), 6)
+    q = jax.random.normal(ks[0], (B, R, H, dh))
+    k_new = jax.random.normal(ks[1], (B, H, C, dh))
+    k_old = jax.random.normal(ks[2], (B, H, C, dh))
+    vc_new = jax.random.normal(ks[3], (B, H, C, Q))
+    vc_old = jax.random.normal(ks[4], (B, H, C, Q))
+    mask = np.array(jax.random.bernoulli(ks[5], 0.6, (B, R, C)))
+    mask[0, 3] = False  # one fully-masked row
+    mask[1] = False  # one fully-masked document
+    out = incr_patch_batched(q, k_new, k_old, vc_new, vc_old,
+                             jnp.asarray(mask), block_r=8)
+    np.testing.assert_array_equal(np.asarray(out[0, 3]), 0.0)
+    np.testing.assert_array_equal(np.asarray(out[1]), 0.0)
+    # row_valid folds into the mask identically: invalidate rows of doc 0
+    row_valid = np.ones((B, R), np.float32)
+    row_valid[0, ::2] = 0.0
+    out_rv = incr_patch_batched(q, k_new, k_old, vc_new, vc_old,
+                                jnp.asarray(mask), row_valid=jnp.asarray(row_valid),
+                                block_r=8)
+    np.testing.assert_array_equal(np.asarray(out_rv[0, ::2]), 0.0)
+    np.testing.assert_allclose(np.asarray(out_rv[0, 1::2]),
+                               np.asarray(out[0, 1::2]), atol=0, rtol=0)
+
+
 def test_incr_patch_matches_engine_math():
     """The kernel computes exactly the engine's apply_replaces step-2a ΔT."""
     from repro.configs.vq_opt_125m import smoke_config

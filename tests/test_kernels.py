@@ -40,6 +40,25 @@ def test_vq_assign_batched_matches_per_doc(B, N, hq, Q, dv):
                                    atol=1e-6)
 
 
+@pytest.mark.parametrize(
+    "B,N,hq,Q,dv",
+    [(2, 13, 3, 48, 24), (3, 7, 1, 40, 96), (1, 257, 2, 96, 40)],
+)
+def test_vq_assign_batched_matches_ref_odd_shapes(B, N, hq, Q, dv):
+    """The batch-grid kernel vs the pure-jnp oracle on non-power-of-two /
+    odd token, head, codebook and chunk extents (token rows are the only
+    padded axis; Q/dv must be exact), including N smaller than one block."""
+    x = jax.random.normal(jax.random.PRNGKey(B * N + Q), (B, N, hq * dv))
+    cb = jax.random.normal(jax.random.PRNGKey(2), (hq, Q, dv)) * 0.5
+    idx, xq = vq_assign_batched(x, cb, block_n=8)
+    assert idx.shape == (B, N, hq) and xq.shape == (B, N, hq * dv)
+    for b in range(B):
+        idx_r, xq_r = vq_assign_ref(x[b].reshape(N, hq, dv), cb)
+        np.testing.assert_array_equal(np.asarray(idx[b]), np.asarray(idx_r))
+        np.testing.assert_allclose(np.asarray(xq[b]).reshape(N, hq, dv),
+                                   np.asarray(xq_r), atol=1e-6)
+
+
 def test_vq_assign_matches_model_vq():
     """Kernel == repro.core.vq assignment (same inner-product trick)."""
     from repro.core import vq as V
