@@ -1,0 +1,167 @@
+"""Benchmark regression gate (ISSUE 4 satellite).
+
+Compares fresh benchmark emissions (``results/BENCH_*.json``) against
+committed baselines (``results/BASELINE_*.json``) and exits non-zero when a
+gated metric regresses beyond its stated tolerance — CI runs this after the
+benchmark smoke steps, so a PR cannot silently trade away ops-saved ratio,
+prefill reuse, or oracle exactness.
+
+Gate policy:
+
+* only DETERMINISTIC metrics are gated (op counts, reuse fractions,
+  traced-shape counts, oracle-match booleans) — wall-clock fields are
+  reported but never gated (CI runner noise);
+* direction-aware: a metric only fails in its *worse* direction, beyond
+  ``max(abs_tol, rel_tol * baseline)``; improvements always pass (and are
+  listed, so a re-anchor can ratchet the baseline);
+* identity fields (workload, doc_len, n_edits, ...) must match the baseline
+  exactly — a param drift between CI and the committed baseline is a gate
+  misconfiguration, reported as an error rather than a pass.
+
+Usage::
+
+    python -m benchmarks.check_regression            # gate (exit 1 on fail)
+    python -m benchmarks.check_regression --update   # re-anchor baselines
+    python -m benchmarks.check_regression --results-dir path/to/results
+
+Re-anchoring: run the benchmarks at the gate params (see .github/workflows/
+ci.yml), inspect the fresh numbers, then ``--update`` to copy every gated
+``BENCH_*.json`` over its ``BASELINE_*.json``. ``results/SUMMARY.json``
+(written by ``benchmarks.run``) carries the same records for full-protocol
+re-anchors.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+# metric -> {higher_is_better, rel_tol, abs_tol} | {must_equal}
+GATES = {
+    "edit_mix": {
+        "bench": "BENCH_edit_mix.json",
+        "baseline": "BASELINE_edit_mix.json",
+        "key": "workload",
+        "identity": ("doc_len", "n_edits"),
+        "metrics": {
+            "ops_speedup": {"higher_is_better": True, "rel_tol": 0.10},
+            "ops_incremental": {"higher_is_better": False, "rel_tol": 0.10},
+            "traced_shapes": {"higher_is_better": False, "abs_tol": 2},
+        },
+    },
+    "suggest_reuse": {
+        "bench": "BENCH_suggest_reuse.json",
+        "baseline": "BASELINE_suggest_reuse.json",
+        "key": "workload",
+        "identity": ("doc_len", "n_edits", "n_new"),
+        "metrics": {
+            "reused_prefill_fraction": {
+                "higher_is_better": True, "rel_tol": 0.10, "abs_tol": 0.02},
+            "suggestions_match_oracle": {"must_equal": True},
+        },
+    },
+}
+
+
+def _load(path: str):
+    with open(path) as f:
+        return json.load(f)
+
+
+def _index(records: list, key: str) -> dict:
+    return {rec[key]: rec for rec in records}
+
+
+def check_gate(name: str, gate: dict, results_dir: str) -> list[str]:
+    """Returns a list of failure strings (empty = gate passes)."""
+    bench_path = os.path.join(results_dir, gate["bench"])
+    base_path = os.path.join(results_dir, gate["baseline"])
+    failures = []
+    for path, kind in ((bench_path, "fresh benchmark"),
+                       (base_path, "baseline")):
+        if not os.path.exists(path):
+            return [f"{name}: missing {kind} file {path}"]
+    fresh = _index(_load(bench_path), gate["key"])
+    base = _index(_load(base_path), gate["key"])
+    for wk, brec in sorted(base.items()):
+        frec = fresh.get(wk)
+        if frec is None:
+            failures.append(f"{name}/{wk}: workload missing from fresh run")
+            continue
+        for field in gate.get("identity", ()):
+            if frec.get(field) != brec.get(field):
+                failures.append(
+                    f"{name}/{wk}: identity field {field} drifted "
+                    f"({brec.get(field)} -> {frec.get(field)}) — regenerate "
+                    "the baseline or fix the CI invocation")
+        for metric, rule in gate["metrics"].items():
+            have, want = frec.get(metric), brec.get(metric)
+            if have is None or want is None:
+                failures.append(f"{name}/{wk}: metric {metric} missing "
+                                f"(fresh={have!r}, baseline={want!r})")
+                continue
+            if "must_equal" in rule:
+                ok = have == rule["must_equal"]
+                verdict = "ok" if ok else "REGRESSED"
+                print(f"  {name}/{wk}.{metric}: {have} "
+                      f"(required {rule['must_equal']}) {verdict}")
+                if not ok:
+                    failures.append(
+                        f"{name}/{wk}: {metric}={have}, must equal "
+                        f"{rule['must_equal']}")
+                continue
+            tol = max(rule.get("abs_tol", 0.0),
+                      rule.get("rel_tol", 0.0) * abs(float(want)))
+            delta = float(have) - float(want)
+            worse = -delta if rule["higher_is_better"] else delta
+            ok = worse <= tol
+            verdict = "ok" if ok else "REGRESSED"
+            print(f"  {name}/{wk}.{metric}: {have} vs baseline {want} "
+                  f"(tol {tol:.4g}) {verdict}")
+            if not ok:
+                failures.append(
+                    f"{name}/{wk}: {metric} regressed {want} -> {have} "
+                    f"(worse by {worse:.4g} > tol {tol:.4g})")
+    return failures
+
+
+def update_baselines(results_dir: str) -> int:
+    rc = 0
+    for name, gate in GATES.items():
+        src = os.path.join(results_dir, gate["bench"])
+        dst = os.path.join(results_dir, gate["baseline"])
+        if not os.path.exists(src):
+            print(f"{name}: cannot re-anchor, {src} missing")
+            rc = 2
+            continue
+        shutil.copyfile(src, dst)
+        print(f"{name}: {src} -> {dst}")
+    return rc
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--results-dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "results"))
+    ap.add_argument("--update", action="store_true",
+                    help="copy fresh BENCH files over the BASELINE files")
+    args = ap.parse_args(argv)
+    if args.update:
+        return update_baselines(args.results_dir)
+    all_failures = []
+    for name, gate in GATES.items():
+        print(f"gate {name}:")
+        all_failures += check_gate(name, gate, args.results_dir)
+    if all_failures:
+        print("\nREGRESSIONS:")
+        for f in all_failures:
+            print(f"  {f}")
+        return 1
+    print("\nall benchmark gates green")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,15 +3,28 @@
   PYTHONPATH=src python -m benchmarks.run            # quick protocol
   PYTHONPATH=src python -m benchmarks.run --full     # longer training runs
 
-Emits name,value CSV lines (plus per-benchmark CSVs under results/).
+Emits name,value CSV lines (plus per-benchmark CSVs/JSONs under results/)
+and a single machine-readable aggregate, ``results/SUMMARY.json`` — one
+row per benchmark — which the regression gate
+(``benchmarks.check_regression``) and future baseline re-anchors consume.
 The dry-run/roofline tables read results/dryrun.jsonl (produced by
 ``python -m repro.launch.dryrun --all --roofline``).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import time
+
+
+def _write_summary(summary: list) -> str:
+    from benchmarks.common import ensure_results
+
+    out = os.path.join(ensure_results(), "SUMMARY.json")
+    with open(out, "w") as f:
+        json.dump(summary, f, indent=2)
+    return out
 
 
 def main():
@@ -23,6 +36,7 @@ def main():
 
     from benchmarks import fig3_offline, fig4_online, table2_speedups
 
+    summary: list[dict] = []  # one row per benchmark -> results/SUMMARY.json
     t0 = time.time()
     print("=== Table 2: edit-processing speedups (op-counted) ===")
     rows = table2_speedups.run(
@@ -32,15 +46,20 @@ def main():
     )
     for r in rows:
         print(f"table2,{r[0]},atomic={r[1]},revision={r[2]},first5={r[3]}")
+    summary.append({"benchmark": "table2_speedups", "rows": [
+        {"workload": r[0], "atomic": r[1], "revision": r[2], "first5": r[3]}
+        for r in rows]})
 
     print(f"\n=== Fig 3: offline speedup vs edit fraction ({time.time()-t0:.0f}s) ===")
     _, slope = fig3_offline.run(
         doc_len=1024 if args.full else 384, n_pairs=24 if args.full else 12)
     print(f"fig3,loglog_slope,{slope:.3f}")
+    summary.append({"benchmark": "fig3_offline", "loglog_slope": slope})
 
     print(f"\n=== Fig 4: online speedup vs location ({time.time()-t0:.0f}s) ===")
     fig4_online.run(doc_len=1024 if args.full else 384,
                     n_edits=80 if args.full else 30)
+    summary.append({"benchmark": "fig4_online", "csv": "results/fig4_online.csv"})
 
     print(f"\n=== Batch scaling (paper §3.1 claim) ({time.time()-t0:.0f}s) ===")
     from benchmarks import batch_scaling
@@ -48,33 +67,49 @@ def main():
     rows = batch_scaling.run(doc_len=1024 if args.full else 384,
                              max_batch=16 if args.full else 8)
     print(f"batch_scaling,b={rows[-1][0]},compressed={rows[-1][1]},dense={rows[-1][2]}")
+    summary.append({"benchmark": "batch_scaling", "max_batch": rows[-1][0],
+                    "compressed": rows[-1][1], "dense": rows[-1][2]})
 
     print(f"\n=== Batched jit serving: per-edit wall-clock ({time.time()-t0:.0f}s) ===")
     _, jrows = batch_scaling.run_jit_batched(
         doc_len=512 if args.full else 256,
         batches=(1, 4, 8, 16) if args.full else (1, 8))
     print(f"batch_scaling_jit,b={jrows[-1][0]},rel_single_step={jrows[-1][3]}")
+    summary.append({"benchmark": "batch_scaling_jit", "batch": jrows[-1][0],
+                    "rel_single_step": jrows[-1][3]})
 
     print(f"\n=== Wall-clock: static-bucket jit engine ({time.time()-t0:.0f}s) ===")
     from benchmarks import wallclock_jit
 
     rows = wallclock_jit.run(lengths=(256, 1024) if not args.full else (256, 1024, 2048))
     print(f"wallclock_jit,n={rows[-1][0]},speedup={rows[-1][3]}")
+    summary.append({"benchmark": "wallclock_jit", "n": rows[-1][0],
+                    "speedup": rows[-1][3]})
 
     print(f"\n=== Edit mix: replace-only vs insert/delete-heavy "
           f"({time.time()-t0:.0f}s) ===")
     from benchmarks import edit_mix
 
-    edit_mix.run(doc_len=512 if args.full else 128,
-                 n_edits=64 if args.full else 16)
+    recs = edit_mix.run(doc_len=512 if args.full else 128,
+                        n_edits=64 if args.full else 16)
+    summary.append({"benchmark": "edit_mix", "rows": recs})
 
     print(f"\n=== Suggestion reuse: continuation decoding over edits "
           f"({time.time()-t0:.0f}s) ===")
     from benchmarks import suggest_reuse
 
-    suggest_reuse.run(doc_len=96 if not args.full else 384,
-                      n_edits=24 if not args.full else 64,
-                      n_new=8)
+    recs = suggest_reuse.run(doc_len=96 if not args.full else 384,
+                             n_edits=24 if not args.full else 64,
+                             n_new=8)
+    summary.append({"benchmark": "suggest_reuse", "rows": recs})
+
+    print(f"\n=== Sharded serving: mesh scaling + dispatch balance "
+          f"({time.time()-t0:.0f}s) ===")
+    from benchmarks import sharded_serving
+
+    recs = sharded_serving.run(doc_len=128 if args.full else 64,
+                               n_edits=48 if args.full else 24)
+    summary.append({"benchmark": "sharded_serving", "rows": recs})
 
     if not args.skip_accuracy:
         print(f"\n=== Table 1: accuracy parity ({time.time()-t0:.0f}s) ===")
@@ -87,6 +122,8 @@ def main():
         )
         for r in rows:
             print(f"table1,{r[0]},acc={r[1]},f1={r[2]}")
+        summary.append({"benchmark": "table1_accuracy", "rows": [
+            {"task": r[0], "acc": r[1], "f1": r[2]} for r in rows]})
 
     dr = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun.jsonl")
     if os.path.exists(dr):
@@ -99,10 +136,15 @@ def main():
         n_err = len(recs) - n_ok - n_skip
         print(f"dryrun,ok={n_ok},skipped={n_skip},errors={n_err}")
         print(roofline.roofline_table(recs))
+        summary.append({"benchmark": "dryrun", "ok": n_ok, "skipped": n_skip,
+                        "errors": n_err})
     else:
         print("\n(run `python -m repro.launch.dryrun --all --roofline --out "
               "results/dryrun.jsonl` for the dry-run/roofline tables)")
-    print(f"\ntotal {time.time()-t0:.0f}s")
+
+    out = _write_summary(summary)
+    print(f"\nwrote {out} ({len(summary)} benchmark rows)")
+    print(f"total {time.time()-t0:.0f}s")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,140 @@
+"""Sharded serving benchmark: the batched edit path over a device mesh
+(ISSUE 4 tentpole — per-device dispatch balance as a benchmarked quantity).
+
+Runs the SAME seeded mixed edit stream through ``BatchServer`` at every
+mesh size (1-D serving mesh over the batch/document axis, DESIGN.md §6)
+and reports per mesh size:
+
+* ``wall_s_per_edit`` — warm flush wall-clock per applied edit;
+* ``mean_shard_imbalance`` — the scheduler's per-dispatch dirty-slot
+  balance quantity (0 = even, 1 = one device did everything);
+* ``tokens_match`` / ``oracle_match`` / ``logits_close_vs_mesh1`` — parity
+  of every final document against the edit-replayed reference, against a
+  NumPy-engine full forward (logits to 3e-4, the differential suite's
+  tolerance), and against the mesh-1 run. The oracle leg is what caught
+  the asynchronous host-mirror read race fixed in
+  ``batch_server._device_copy``.
+
+Mesh sizes above the visible device count are skipped (run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` to exercise 2/4 on
+a laptop or CI — the flag must be set before jax initializes). Emits
+``results/BENCH_sharded_serving.json`` plus name,value CSV lines.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import ensure_results
+
+MIX = {"replace": 0.6, "insert": 0.25, "delete": 0.15}
+
+
+def _apply_stream(srv, refs, rng, vocab: int, n_edits: int) -> int:
+    ops, ps = list(MIX), np.asarray([MIX[k] for k in MIX])
+    n_docs = len(refs)
+    for _ in range(n_edits):
+        did = f"d{int(rng.integers(n_docs))}"
+        r = refs[did]
+        op = str(rng.choice(ops, p=ps / ps.sum()))
+        if op == "delete" and len(r) <= 1:
+            op = "replace"
+        if op == "replace":
+            pos, tok = int(rng.integers(len(r))), int(rng.integers(vocab))
+            srv.submit_replace(did, pos, tok)
+            r[pos] = tok
+        elif op == "insert":
+            pos, tok = int(rng.integers(len(r) + 1)), int(rng.integers(vocab))
+            srv.submit_insert(did, pos, tok)
+            r.insert(pos, tok)
+        else:
+            pos = int(rng.integers(len(r)))
+            srv.submit_delete(did, pos)
+            del r[pos]
+    return srv.flush()
+
+
+def run(doc_len: int = 64, n_edits: int = 32, n_docs: int = 8,
+        mesh_sizes=None, seed: int = 0) -> list[dict]:
+    import jax
+
+    from repro.configs.vq_opt_125m import smoke_config
+    from repro.core.incremental import IncrementalEngine
+    from repro.launch.mesh import make_serving_mesh
+    from repro.models import transformer as T
+    from repro.serving.batch_server import BatchServer
+
+    n_dev = jax.device_count()
+    if mesh_sizes is None:
+        mesh_sizes = [k for k in (1, 2, 4, 8) if k <= n_dev]
+    skipped = [k for k in (1, 2, 4, 8) if k > n_dev]
+    if skipped:
+        print(f"sharded_serving: mesh sizes {skipped} skipped "
+              f"({n_dev} devices; set "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+    cfg = smoke_config(vqt=True)
+    params = jax.device_get(T.init_params(jax.random.PRNGKey(seed), cfg))
+    neng = IncrementalEngine(params, cfg)
+    doc_rng = np.random.default_rng(seed)
+    base_docs = {f"d{i}": list(doc_rng.integers(0, cfg.vocab, doc_len))
+                 for i in range(n_docs)}
+
+    records = []
+    logits_mesh1 = None
+    for k in mesh_sizes:
+        srv = BatchServer(params, cfg, edit_capacity=4, row_capacity=64,
+                          max_batch=n_docs, min_doc_capacity=64,
+                          mesh=make_serving_mesh(k))
+        srv.open_documents({d: list(t) for d, t in base_docs.items()})
+        refs = {d: list(t) for d, t in base_docs.items()}
+        rng = np.random.default_rng(seed + 1)
+        _apply_stream(srv, refs, rng, cfg.vocab, n_edits)  # warm the shapes
+        t0 = time.perf_counter()
+        applied = _apply_stream(srv, refs, rng, cfg.vocab, n_edits)
+        wall = time.perf_counter() - t0
+        tokens_match = all(list(srv.tokens(d)) == r for d, r in refs.items())
+        logits = {d: srv.logits(d) for d in refs}
+        oracle_match = True
+        for d in refs:
+            doc = srv.docs[d]
+            ns = neng.full_forward(doc.seq_tokens(), doc.seq_positions())
+            if not np.allclose(logits[d], neng.logits_at(ns), atol=3e-4):
+                oracle_match = False
+        if k == 1:
+            logits_mesh1 = logits
+        logits_close = (logits_mesh1 is None or all(
+            np.allclose(logits[d], logits_mesh1[d], atol=3e-4)
+            for d in refs))
+        rec = {
+            "mesh_size": k,
+            "doc_len": doc_len,
+            "n_docs": n_docs,
+            "n_edits": n_edits,
+            "wall_s_per_edit": round(wall / max(applied, 1), 5),
+            "mean_shard_imbalance": round(
+                srv.stats.mean_shard_imbalance, 4),
+            "sharded_dispatches": srv.stats.sharded_dispatches,
+            "batch_dispatches": srv.stats.batch_steps,
+            "tokens_match": bool(tokens_match),
+            "oracle_match": bool(oracle_match),
+            "logits_close_vs_mesh1": bool(logits_close),
+        }
+        records.append(rec)
+        print(f"sharded_serving,mesh={k},"
+              f"wall_per_edit_ms={rec['wall_s_per_edit']*1e3:.2f},"
+              f"imbalance={rec['mean_shard_imbalance']},"
+              f"tokens_match={rec['tokens_match']},"
+              f"oracle_match={rec['oracle_match']},"
+              f"logits_close={rec['logits_close_vs_mesh1']}")
+    out = os.path.join(ensure_results(), "BENCH_sharded_serving.json")
+    with open(out, "w") as f:
+        json.dump(records, f, indent=2)
+    print(f"wrote {out}")
+    return records
+
+
+if __name__ == "__main__":
+    run()

@@ -161,6 +161,19 @@ def batch_shardings(batch, mesh: Mesh, *, seq_sharded: bool = False):
     return jax.tree_util.tree_map_with_path(one, batch)
 
 
+def serving_batch_sharding(mesh: Mesh, axis: str = "data") -> NamedSharding:
+    """Leading-(document-)axis sharding for the batched serving stack
+    (DESIGN.md §6): usable as a jit/shard_map pytree *prefix*, so one value
+    covers every leaf of a ``BatchedJitState`` / edit-bucket / ``KVExport``
+    pytree — dim 0 (the batch of documents) splits across ``axis``, all
+    trailing dims replicate. ``BatchedJitEngine._sharded`` builds every
+    sharded dispatch spec from this; the scheduler guarantees divisibility
+    by padding dispatch batches to a multiple of the mesh axis size."""
+    if axis not in mesh.axis_names:
+        raise ValueError(f"mesh {mesh.axis_names} has no axis {axis!r}")
+    return NamedSharding(mesh, P(axis))
+
+
 def cache_shardings(caches, mesh: Mesh, *, batch: int):
     """Decode caches. Layout (after the stage-stacking leading axis):
     k/v [r, b, S, Hkv, dh]; mla ckv [r, b, S, c]; ssm [r, b, H, dk, dv];

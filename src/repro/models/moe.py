@@ -28,20 +28,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
-from repro.distributed.context import get_ctx
+from repro.distributed.context import get_ctx, shard_map_compat as _shard_map
 from repro.models.ffn import ffn_apply, ffn_init
-
-
-def _shard_map(f, *, mesh, in_specs, out_specs):
-    """jax.shard_map appeared (with check_vma) in newer jax; older releases
-    ship it as jax.experimental.shard_map (with check_rep)."""
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=False)
-    from jax.experimental.shard_map import shard_map
-
-    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                     check_rep=False)
 
 
 def moe_init(key: jax.Array, cfg: ArchConfig, dtype=jnp.float32) -> dict:

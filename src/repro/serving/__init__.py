@@ -10,3 +10,4 @@ from repro.serving.batch_server import BatchServer, BatchStats, next_pow2
 from repro.serving.suggest import (
     PositionHeadroomError, SuggestionEngine, SuggestStats, oracle_suggestion,
 )
+from repro.launch.mesh import make_serving_mesh

@@ -28,8 +28,23 @@ batch server's capacity buckets guarantee this. With
 dimension (one ``(doc, row-block, head)`` cell per grid point), so the
 batched step reuses the same kernel as single-document serving.
 
+Multi-device serving (DESIGN.md §6)
+-----------------------------------
+Pass ``mesh=`` (see ``repro.launch.mesh.make_serving_mesh``) to shard the
+document axis over a 1-D device mesh: every batched entry point becomes a
+``shard_map`` over per-shard ``[B/n_dev, ...]`` slices (weights replicate
+via closure), so each device runs the ordinary vmapped step — including
+the batched Pallas kernels, whose grids see only the local batch slice —
+and no cross-device communication exists anywhere in a dispatch (sequence
+order is position-id order *within* each document, so the batch axis is
+embarrassingly parallel). ``B`` must be a multiple of the mesh's batch
+axis; the batch server pads dispatches accordingly. A mesh of size 1 (or
+``mesh=None``) routes through the exact single-device jit path, bit-for-bit
+identical to pre-mesh behavior (tested in tests/test_sharded_parity.py).
+
 Exactness: slice b of every batched result equals the single-document
-engine run on document b (tested in tests/test_batch_serving.py).
+engine run on document b (tested in tests/test_batch_serving.py), under
+any mesh size (tests/test_sharded_parity.py).
 """
 from __future__ import annotations
 
@@ -38,7 +53,10 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh
 
+from repro.distributed.context import shard_map_compat
+from repro.launch.sharding import serving_batch_sharding
 from repro.serving.jit_engine import JitIncrementalEngine, JitState, KVExport
 
 # A JitState whose every leaf carries a leading [B] document axis.
@@ -59,23 +77,85 @@ class BatchedJitEngine(JitIncrementalEngine):
     """vmap'd ``JitIncrementalEngine``: one fixed-shape step, B documents.
 
     Same constructor as the single-document engine (``edit_capacity``,
-    ``row_capacity``, ``use_patch_kernel``, ``_weights``).
+    ``row_capacity``, ``use_patch_kernel``, ``_weights``), plus ``mesh`` /
+    ``batch_axis`` for data-parallel sharding of the document axis.
     """
+
+    def __init__(self, params, cfg, *, edit_capacity: int = 8,
+                 row_capacity: int = 64, use_patch_kernel: bool = False,
+                 mesh: Optional[Mesh] = None, batch_axis: str = "data",
+                 _weights=None):
+        super().__init__(params, cfg, edit_capacity=edit_capacity,
+                         row_capacity=row_capacity,
+                         use_patch_kernel=use_patch_kernel, _weights=_weights)
+        if mesh is not None:
+            serving_batch_sharding(mesh, batch_axis)  # validates the axis
+        self.mesh = mesh
+        self.batch_axis = batch_axis
+        self._sharded_fns: dict[str, callable] = {}
+
+    @property
+    def n_shards(self) -> int:
+        """Devices the document axis splits across (1 = single-device path)."""
+        return int(self.mesh.shape[self.batch_axis]) if self.mesh is not None else 1
+
+    # ------------------------------------------------------------ shard plumbing
+
+    def _check_batch(self, B: int) -> None:
+        if B % self.n_shards != 0:
+            raise ValueError(
+                f"batch of {B} documents does not divide the serving mesh's "
+                f"{self.n_shards}-way batch axis — pad the dispatch "
+                "(BatchServer pads to a multiple automatically)")
+
+    def _sharded(self, name: str):
+        """jit(shard_map(vmapped impl)) with every input/output pytree leaf
+        sharded on the batch axis (a single ``P(batch_axis)`` acts as the
+        pytree-prefix spec for states, buckets and exports alike). Built
+        lazily per entry point and cached per engine — one compiled step
+        per (B, n_cap, C, R) exactly like the single-device path."""
+        fn = self._sharded_fns.get(name)
+        if fn is None:
+            builders = {
+                "full_forward": (
+                    lambda t, p, v: jax.vmap(self._full_forward_impl)(t, p, v),
+                    3),
+                "apply_edits": (
+                    lambda s, sl, tk, pi, op: jax.vmap(self._apply_edits_impl)(
+                        s, sl, tk, pi, op), 5),
+                "export_kv": (lambda s: jax.vmap(self._export_kv_impl)(s), 1),
+                "logits_at": (
+                    lambda s, i: jax.vmap(self._logits_at_impl)(s, i), 2),
+            }
+            body, n_args = builders[name]
+            spec = serving_batch_sharding(self.mesh, self.batch_axis).spec
+            fn = jax.jit(shard_map_compat(
+                body, mesh=self.mesh, in_specs=(spec,) * n_args,
+                out_specs=spec))
+            self._sharded_fns[name] = fn
+        return fn
 
     # ------------------------------------------------------------ batched API
 
-    @functools.partial(jax.jit, static_argnums=0)
     def batch_full_forward(self, tokens: jax.Array, positions: jax.Array,
                            valid: Optional[jax.Array] = None
                            ) -> BatchedJitState:
         """tokens/positions: [B, n] int32, valid: [B, n] bool (None = all
         real) → stacked state, leaves [B, ...]."""
+        if self.n_shards > 1:
+            self._check_batch(tokens.shape[0])
+            if valid is None:
+                valid = jnp.ones(tokens.shape, bool)
+            return self._sharded("full_forward")(tokens, positions, valid)
+        return self._batch_full_forward_local(tokens, positions, valid)
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def _batch_full_forward_local(self, tokens, positions, valid=None):
         if valid is None:
             return jax.vmap(
                 lambda t, p: self._full_forward_impl(t, p))(tokens, positions)
         return jax.vmap(self._full_forward_impl)(tokens, positions, valid)
 
-    @functools.partial(jax.jit, static_argnums=0)
     def batch_apply_edits(
         self, state: BatchedJitState, slot: jax.Array, tok: jax.Array,
         pos_id: jax.Array, op: jax.Array,
@@ -85,6 +165,13 @@ class BatchedJitEngine(JitIncrementalEngine):
         flag is set exceeded its row bucket R at some layer; its slice is
         UNRELIABLE and the caller must re-run a full forward for it (the
         batch server's fallback + capacity-doubling policy)."""
+        if self.n_shards > 1:
+            self._check_batch(slot.shape[0])
+            return self._sharded("apply_edits")(state, slot, tok, pos_id, op)
+        return self._batch_apply_edits_local(state, slot, tok, pos_id, op)
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def _batch_apply_edits_local(self, state, slot, tok, pos_id, op):
         return jax.vmap(self._apply_edits_impl)(state, slot, tok, pos_id, op)
 
     def batch_apply_replaces(
@@ -114,18 +201,30 @@ class BatchedJitEngine(JitIncrementalEngine):
         op = jnp.where(slot >= 0, OP_DELETE, 0).astype(slot.dtype)
         return self.batch_apply_edits(state, slot, z, z, op)
 
-    @functools.partial(jax.jit, static_argnums=0)
     def batch_export_kv(self, state: BatchedJitState) -> KVExport:
         """Position-ordered KV export for every document in the batch in one
         fused gather: each ``KVExport`` leaf gains a leading [B] axis.
         Parity-tested against the per-document ``export_kv`` — the batched
         entry point for a future bucket-batched suggestion refresh (the
         current scheduler exports per document as it refreshes)."""
-        return jax.vmap(self._export_kv_impl)(state)
+        if self.n_shards > 1:
+            self._check_batch(state.tokens.shape[0])
+            return self._sharded("export_kv")(state)
+        return self._batch_export_kv_local(state)
 
     @functools.partial(jax.jit, static_argnums=0)
+    def _batch_export_kv_local(self, state):
+        return jax.vmap(self._export_kv_impl)(state)
+
     def batch_logits_at(self, state: BatchedJitState,
                         index: jax.Array) -> jax.Array:
         """index: [B] int32 per-document slot (the last-in-position-order
         valid slot for padded docs — the host scheduler tracks it)."""
+        if self.n_shards > 1:
+            self._check_batch(index.shape[0])
+            return self._sharded("logits_at")(state, index)
+        return self._batch_logits_at_local(state, index)
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def _batch_logits_at_local(self, state, index):
         return jax.vmap(self._logits_at_impl)(state, index)

@@ -36,7 +36,17 @@ The serving model (ROADMAP north star: heavy concurrent traffic):
    from the earliest invalidated position, DESIGN.md §5). A newer edit for
    the same document invalidates its pending suggestion; the refresh waits
    until the edits apply and then reuses every cache row before the
-   earliest edited position id.
+   earliest edited position id;
+7. with ``mesh=`` (``repro.launch.mesh.make_serving_mesh``) every dispatch
+   shards its document axis across the mesh (DESIGN.md §6): batches are
+   padded to a multiple of the mesh's batch axis and members are PLACED —
+   each shard serves a contiguous row block, so the scheduler assigns
+   heavy edit buckets to the lightest block (greedy LPT) and tracks the
+   per-device dirty-slot imbalance in ``stats.mean_shard_imbalance``.
+   Defrag / grow / overflow-fallback re-ingests and suggestion refreshes
+   are per-document host-side slow paths and are untouched by sharding; a
+   mesh of size 1 (or ``mesh=None``) is the pre-mesh scheduler bit-for-bit
+   (tests/test_sharded_parity.py).
 
 Scheduler invariants (property-tested in tests/test_batch_scheduler.py):
 every submitted edit is applied exactly once; all bucket capacities
@@ -85,6 +95,25 @@ from repro.serving.suggest import (
 _OPCODE = {"replace": OP_REPLACE, "insert": OP_INSERT, "delete": OP_DELETE}
 
 
+def _device_copy(arr: np.ndarray):
+    """Move a LIVE host mirror onto the device through an eager host copy.
+
+    jax's CPU backend reads numpy inputs ASYNCHRONOUSLY (and may zero-copy
+    them outright) — ``jnp.array``'s copy semantics do not guarantee the
+    source buffer is consumed before the call returns. Handing a mutable
+    mirror (``doc.tokens`` / ``doc.valid`` / ``doc.positions``) straight to
+    ``full_forward`` therefore lets the NEXT take's host-side mutation race
+    the deferred device read — observed as a re-ingest that "saw" inserts
+    which the following dispatch then applied AGAIN: double-counted
+    ``n_real``, garbage columns baked into every row's T, VQ code flips
+    (caught by the sharded-serving benchmark's oracle leg). The numpy-level
+    ``np.array(..., copy=True)`` completes before returning and the fresh
+    buffer is never mutated, so whenever jax actually reads it the content
+    is the call-time snapshot. Arrays freshly built per call (``np.stack``
+    results) are safe without this."""
+    return jnp.asarray(np.array(arr, copy=True))
+
+
 @dataclass
 class BatchStats:
     docs: int = 0
@@ -99,10 +128,22 @@ class BatchStats:
     rejits: int = 0  # distinct dispatch shapes traced
     suggest_refreshes: int = 0  # suggestion recomputes served
     suggest_invalidations: int = 0  # fresh suggestions staled by newer edits
+    # ---- per-device dispatch balance (mesh>1 serving, DESIGN.md §6)
+    sharded_dispatches: int = 0  # dispatches issued over a mesh of size > 1
+    shard_imbalance_sum: float = 0.0  # sum over dispatches of (max-min)/max load
 
     @property
     def mean_batch(self) -> float:
         return self.batched_docs / max(self.batch_steps, 1)
+
+    @property
+    def mean_shard_imbalance(self) -> float:
+        """Mean per-dispatch dirty-slot imbalance across mesh shards:
+        0.0 = perfectly balanced, 1.0 = some device received all the work
+        while another idled. The scheduler's balanced placement keeps this
+        low; it is the first-class benchmarked quantity of sharded serving
+        (benchmarks/sharded_serving.py)."""
+        return self.shard_imbalance_sum / max(self.sharded_dispatches, 1)
 
 
 @dataclass
@@ -143,7 +184,8 @@ class BatchServer:
     def __init__(self, params: dict, cfg: ArchConfig, *, edit_capacity: int = 8,
                  row_capacity: int = 64, max_batch: int = 8,
                  min_doc_capacity: int = 16, use_patch_kernel: bool = False,
-                 pos_pool: Optional[int] = None):
+                 pos_pool: Optional[int] = None, mesh=None,
+                 batch_axis: str = "data"):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         self.cfg = cfg
@@ -152,10 +194,24 @@ class BatchServer:
         self.max_batch = max_batch
         self.min_doc_capacity = next_pow2(min_doc_capacity)
         self.use_patch_kernel = use_patch_kernel
+        self.mesh = mesh
+        self.batch_axis = batch_axis
         self.pos_pool = pos_pool or (cfg.pos_pool if cfg.pos_pool else cfg.max_seq)
         base = BatchedJitEngine(params, cfg, edit_capacity=self.C,
                                 row_capacity=self.R,
-                                use_patch_kernel=use_patch_kernel)
+                                use_patch_kernel=use_patch_kernel,
+                                mesh=mesh, batch_axis=batch_axis)
+        if base.n_shards > max_batch:
+            raise ValueError(
+                f"serving mesh batch axis of {base.n_shards} exceeds "
+                f"max_batch={max_batch} — every dispatch must give each "
+                "device at least one document row")
+        if max_batch % base.n_shards != 0:
+            raise ValueError(
+                f"max_batch={max_batch} is not a multiple of the serving "
+                f"mesh's {base.n_shards}-way batch axis — a full chunk "
+                "would pad past the max_batch cap")
+        self.n_shards = base.n_shards
         self._weights = base.weights
         self._engines: dict[tuple[int, int], BatchedJitEngine] = {
             (self.C, self.R): base}
@@ -179,13 +235,15 @@ class BatchServer:
     # ------------------------------------------------------------- engines
 
     def engine(self, edit_capacity: int, row_capacity: int) -> BatchedJitEngine:
-        """The per-capacity-bucket engine (cached; shares weight stacks)."""
+        """The per-capacity-bucket engine (cached; shares weight stacks and
+        the serving mesh)."""
         key = (edit_capacity, row_capacity)
         if key not in self._engines:
             self._engines[key] = BatchedJitEngine(
                 {}, self.cfg, edit_capacity=edit_capacity,
                 row_capacity=row_capacity,
-                use_patch_kernel=self.use_patch_kernel, _weights=self._weights)
+                use_patch_kernel=self.use_patch_kernel, mesh=self.mesh,
+                batch_axis=self.batch_axis, _weights=self._weights)
         return self._engines[key]
 
     def _count_shape(self, shape: tuple) -> None:
@@ -196,8 +254,53 @@ class BatchServer:
     def _padded_batch(self, chunk_len: int) -> int:
         """Dispatch batch sizes are padded up to a power of two (capped at
         ``max_batch``) so each capacity bucket compiles O(log max_batch)
-        shapes instead of one per observed group size."""
-        return min(next_pow2(chunk_len), self.max_batch)
+        shapes instead of one per observed group size — then rounded up to a
+        multiple of the serving mesh's batch axis, the shard_map divisibility
+        contract (each device takes a contiguous ``B_pad / n_shards`` block
+        of document rows)."""
+        b = min(next_pow2(chunk_len), self.max_batch)
+        n = self.n_shards
+        b = max(b, n)
+        return -(-b // n) * n
+
+    def _place_rows(self, weights: list, B_pad: int) -> tuple[list, list]:
+        """Balanced placement of dispatch members onto the padded batch rows.
+
+        Each mesh shard serves the contiguous row block
+        ``[s*B_pad/n, (s+1)*B_pad/n)``, so WHERE a document lands decides
+        which device does its dirty-slot work. Greedy longest-processing-time
+        assignment: heaviest bucket first onto the lightest non-full shard —
+        the classic 4/3-approximation to makespan, plenty for C-bounded
+        bucket weights. Returns ``(rows, loads)``: ``rows[r]`` is the member
+        index occupying padded row ``r`` (None = filler row carrying an
+        empty edit bucket), ``loads[s]`` the per-shard dirty-slot totals.
+        With a single shard the placement is the identity — the pre-mesh
+        dispatch layout, bit-for-bit."""
+        n = self.n_shards
+        if n == 1:
+            rows = list(range(len(weights)))
+            rows += [None] * (B_pad - len(weights))
+            return rows, [sum(weights)]
+        per = B_pad // n
+        blocks: list[list] = [[] for _ in range(n)]
+        loads = [0] * n
+        order = sorted(range(len(weights)), key=lambda i: (-weights[i], i))
+        for i in order:
+            s = min((j for j in range(n) if len(blocks[j]) < per),
+                    key=lambda j: (loads[j], len(blocks[j]), j))
+            blocks[s].append(i)
+            loads[s] += weights[i]
+        rows = []
+        for blk in blocks:
+            rows.extend(blk)
+            rows.extend([None] * (per - len(blk)))
+        return rows, loads
+
+    def _note_balance(self, loads: list) -> None:
+        if self.n_shards > 1:
+            self.stats.sharded_dispatches += 1
+            hi = max(loads)
+            self.stats.shard_imbalance_sum += (hi - min(loads)) / max(hi, 1)
 
     @property
     def _pos_sentinel(self) -> int:
@@ -243,15 +346,20 @@ class BatchServer:
             for lo in range(0, len(members), self.max_batch):
                 chunk = members[lo:lo + self.max_batch]
                 B_pad = self._padded_batch(len(chunk))
-                pad = [chunk[0]] * (B_pad - len(chunk))
-                toks = np.stack([c[1] for c in chunk + pad])
-                vals = np.stack([c[2] for c in chunk + pad])
-                poss = np.stack([c[3] for c in chunk + pad])
+                # ingest work scales with real length: balance it per shard
+                rows, loads = self._place_rows([c[4] for c in chunk], B_pad)
+                row_of = [chunk[i] if i is not None else chunk[0] for i in rows]
+                toks = np.stack([c[1] for c in row_of])
+                vals = np.stack([c[2] for c in row_of])
+                poss = np.stack([c[3] for c in row_of])
                 bstate = eng.batch_full_forward(
                     jnp.asarray(toks), jnp.asarray(poss), jnp.asarray(vals))
                 self._count_shape(("full", B_pad, n_cap))
-                for b, (doc_id, padded, valid, positions, n, n_cap,
-                        alloc) in enumerate(chunk):
+                self._note_balance(loads)
+                for b, i in enumerate(rows):
+                    if i is None:
+                        continue
+                    doc_id, padded, valid, positions, n, n_cap, alloc = chunk[i]
                     self.docs[doc_id] = _BatchDoc(
                         doc_id=doc_id, tokens=padded, valid=valid,
                         positions=positions, slots=list(range(n)),
@@ -490,17 +598,20 @@ class BatchServer:
         docs = [t[0] for t in chunk]
         buckets = [t[2] for t in chunk]
         counts = [t[3] for t in chunk]
-        # pad to a pow2 batch with copies of doc 0 carrying empty edit
-        # buckets (all -1): a no-op slice whose output is discarded
+        # pad to a pow2 batch (multiple of the mesh's batch axis) with copies
+        # of doc 0 carrying empty edit buckets (all -1): no-op slices whose
+        # output is discarded. Members are placed to balance dirty-slot work
+        # across the contiguous per-shard row blocks.
         B_pad = self._padded_batch(len(chunk))
-        n_fill = B_pad - len(chunk)
+        rows, loads = self._place_rows(counts, B_pad)
         empty = (np.full(C, -1, np.int32), np.zeros(C, np.int32),
                  np.zeros(C, np.int32), np.zeros(C, np.int32))
-        padded = buckets + [empty] * n_fill
-        states = [d.state for d in docs] + [docs[0].state] * n_fill
-        slot = jnp.asarray(np.stack([b[0] for b in padded]))
-        tok = jnp.asarray(np.stack([b[1] for b in padded]))
-        pos = jnp.asarray(np.stack([b[2] for b in padded]))
+        row_buckets = [buckets[i] if i is not None else empty for i in rows]
+        states = [docs[i].state if i is not None else docs[0].state
+                  for i in rows]
+        slot = jnp.asarray(np.stack([b[0] for b in row_buckets]))
+        tok = jnp.asarray(np.stack([b[1] for b in row_buckets]))
+        pos = jnp.asarray(np.stack([b[2] for b in row_buckets]))
         batched = stack_states(states)
         if kind == "replace":
             new_state, overflow = eng.batch_apply_replaces(batched, slot, tok)
@@ -515,10 +626,14 @@ class BatchServer:
         # all three op kinds share one compiled step per (B, n_cap, C, R):
         # the op vector is data, so `kind` is NOT part of the traced shape
         self._count_shape(("edit", B_pad, n_cap, C, R))
+        self._note_balance(loads)
         applied = 0
-        for b, doc in enumerate(docs):
-            applied += counts[b]
-            self.stats.edits_applied += counts[b]
+        for b, i in enumerate(rows):
+            if i is None:
+                continue
+            doc = docs[i]
+            applied += counts[i]
+            self.stats.edits_applied += counts[i]
             if overflow[b]:
                 self._fallback_full_forward(doc)
             else:
@@ -530,9 +645,9 @@ class BatchServer:
     def _reingest(self, doc: _BatchDoc) -> None:
         """Rebuild device state from the host mirrors (one full forward)."""
         eng = self.engine(self.C, self.R)
-        doc.state = eng.full_forward(jnp.asarray(doc.tokens),
-                                     jnp.asarray(doc.positions),
-                                     jnp.asarray(doc.valid))
+        doc.state = eng.full_forward(_device_copy(doc.tokens),
+                                     _device_copy(doc.positions),
+                                     _device_copy(doc.valid))
         # the state is a from-scratch full forward again: every exported
         # column is trustworthy for suggestion KV reuse
         doc.touched_from = None

@@ -236,7 +236,11 @@ def oracle_suggestion(params: dict, cfg: ArchConfig,
     the decode path). The differential harness compares ``SuggestionEngine``
     outputs against this token-for-token. Pass a reusable ``suggester`` to
     share jit caches across oracle calls."""
-    state = engine.full_forward(jnp.asarray(tokens), jnp.asarray(positions),
-                                jnp.asarray(valid))
+    # eager host copies: callers pass LIVE server host mirrors, which jax
+    # reads asynchronously (and may zero-copy) — a later edit would race
+    # the deferred ingest read (see batch_server._device_copy)
+    state = engine.full_forward(jnp.asarray(np.array(tokens, copy=True)),
+                                jnp.asarray(np.array(positions, copy=True)),
+                                jnp.asarray(np.array(valid, copy=True)))
     s = suggester or SuggestionEngine(params, cfg)
     return s.refresh(engine, state, n_new=n_new, export_invalid_from=0)

@@ -168,6 +168,69 @@ def test_failed_dispatch_restores_queue(setup, monkeypatch):
     assert toks[2] == 9 and toks[5] == 4
 
 
+def _gap_profile(alloc):
+    return [alloc.gap_at(i) for i in range(len(alloc) + 1)]
+
+
+def test_failed_dispatch_rollback_no_allocator_leak(setup, monkeypatch):
+    """A rolled-back failed dispatch must restore the affected documents'
+    ``PositionAllocator`` gap state exactly — even when the take itself ran
+    a defrag (id re-spread + re-ingest) first — and must not leak any gap
+    state into documents placed on other shard rows of the same dispatch or
+    not dispatched at all (ISSUE 4 satellite). Runs over a 2-shard mesh when
+    the environment has the devices (the CI test-multidevice job), else
+    single-device — the rollback path is identical."""
+    import jax
+
+    from repro.launch.mesh import make_serving_mesh
+
+    cfg, params = setup
+    mesh = make_serving_mesh(min(2, jax.device_count()))
+    # pool of 16 over 8 tokens: the gap at one insertion point survives
+    # exactly one insert, so the second take at the same point must defrag
+    srv = BatchServer(params, cfg, edit_capacity=4, row_capacity=16,
+                      max_batch=4, min_doc_capacity=16, pos_pool=16,
+                      mesh=mesh)
+    ref = {d: list(range(1, 9)) for d in ("a", "b", "c")}
+    for d, toks in ref.items():
+        srv.open_document(d, toks)
+    srv.submit_insert("a", 3, 5)
+    ref["a"].insert(3, 5)
+    srv.flush()  # consumes doc a's gap at sequence index 3
+
+    pre = {d: srv.docs[d].allocator.snapshot().copy() for d in ref}
+    pre_gaps = {d: _gap_profile(srv.docs[d].allocator) for d in ref}
+    srv.submit_insert("a", 3, 6)  # gap exhausted: the take defrags first
+    srv.submit_insert("b", 0, 7)  # same dispatch group, different shard row
+    ref["a"].insert(3, 6)
+    ref["b"].insert(0, 7)
+    eng = srv.engine(srv.C, srv.docs["a"].row_capacity)
+    monkeypatch.setattr(
+        eng, "batch_apply_inserts",
+        lambda *a, **k: (_ for _ in ()).throw(
+            RuntimeError("simulated device failure")))
+    applied_before = srv.stats.edits_applied
+    with pytest.raises(RuntimeError, match="simulated device failure"):
+        srv.step()
+    assert srv.stats.defrags >= 1  # the take really exercised the slow path
+
+    # every allocator is back to its pre-take gap state: the defragged doc
+    # rolled back to pre-defrag ids, its dispatch-mates and idle docs are
+    # untouched
+    for d in ref:
+        np.testing.assert_array_equal(srv.docs[d].allocator.snapshot(),
+                                      pre[d])
+        assert _gap_profile(srv.docs[d].allocator) == pre_gaps[d]
+    assert list(srv.docs["a"].pending) == [("insert", 3, 6)]
+    assert list(srv.docs["b"].pending) == [("insert", 0, 7)]
+    assert srv.stats.edits_applied == applied_before
+
+    monkeypatch.undo()
+    srv.flush()  # the retry re-defrags and applies everything exactly once
+    for d, toks in ref.items():
+        assert list(srv.tokens(d)) == toks, d
+
+
 # ------------------------------------------------------------ property-based
 
 

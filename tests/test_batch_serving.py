@@ -79,6 +79,10 @@ def test_batch_apply_replaces_matches_numpy_per_doc(setup):
 
 
 def test_batch_matches_single_doc_engine_exactly(setup):
+    # float atol is 3e-4, not 1e-5: the vmapped and single-doc programs
+    # batch their reductions differently, and the drift depends on the CPU
+    # client's partitioning (the forced-host-device CI leg reaches ~2.4e-4).
+    # Codes — the quantity serving correctness rests on — must match exactly.
     cfg, params, beng, neng = setup
     seng = JitIncrementalEngine({}, cfg, edit_capacity=4, row_capacity=32,
                                 _weights=beng.weights)
@@ -88,14 +92,16 @@ def test_batch_matches_single_doc_engine_exactly(setup):
                for b in range(3)]
     restacked = stack_states(singles)
     for a, c in zip(bstate, restacked):
-        np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=3e-4)
+    np.testing.assert_array_equal(np.asarray(bstate.codes),
+                                  np.asarray(restacked.codes))
     ep = jnp.asarray([[1, 20, -1, -1]] * 3, jnp.int32)
     et = jnp.asarray([[7, 9, 0, 0]] * 3, jnp.int32)
     b2, ovf = beng.batch_apply_replaces(bstate, ep, et)
     s2, o2 = seng.apply_replaces(singles[0], ep[0], et[0])
     assert bool(ovf[0]) == bool(o2)
     np.testing.assert_allclose(np.asarray(unstack_state(b2, 0).x),
-                               np.asarray(s2.x), atol=1e-5)
+                               np.asarray(s2.x), atol=3e-4)
     np.testing.assert_array_equal(np.asarray(unstack_state(b2, 0).codes),
                                   np.asarray(s2.codes))
 
@@ -219,6 +225,53 @@ def test_server_logits_match_numpy(setup):
     # recompute from the real-length, sequence-ordered document directly
     ns_real = neng.full_forward(doc.seq_tokens(), doc.seq_positions())
     np.testing.assert_allclose(got, neng.logits_at(ns_real), atol=3e-4)
+
+
+def test_grow_reingest_does_not_race_host_mirrors(setup):
+    """Regression: jax reads numpy inputs ASYNCHRONOUSLY (and may zero-copy
+    them), so a grow-triggered re-ingest that handed the live host mirrors
+    to ``full_forward`` could "see" the inserts the very same take peeled
+    AFTER it — the dispatch then applied them a second time (double-counted
+    ``n_real``, garbage T columns, VQ code flips). ``_device_copy`` now
+    snapshots mirrors eagerly. This drives the exact traffic shape that
+    exposed the race — full-capacity documents whose insert takes grow +
+    re-ingest while other documents keep the device queue busy — and
+    asserts codes/counters stay exact against the NumPy engine."""
+    cfg, params, beng, neng = setup
+    srv = BatchServer(jax.device_get(params), cfg, edit_capacity=4,
+                      row_capacity=64, max_batch=8, min_doc_capacity=64)
+    rng = np.random.default_rng(0)
+    ref = {f"d{i}": list(rng.integers(0, cfg.vocab, 64)) for i in range(8)}
+    srv.open_documents({d: list(t) for d, t in ref.items()})
+    for _ in range(24):  # mixed stream; docs are FULL, so inserts grow
+        did = f"d{int(rng.integers(8))}"
+        r = ref[did]
+        kind = rng.choice(["replace", "insert", "delete"], p=[0.5, 0.3, 0.2])
+        if kind == "insert":
+            p, t = int(rng.integers(len(r) + 1)), int(rng.integers(cfg.vocab))
+            srv.submit_insert(did, p, t)
+            r.insert(p, t)
+        elif kind == "delete" and len(r) > 1:
+            p = int(rng.integers(len(r)))
+            srv.submit_delete(did, p)
+            del r[p]
+        else:
+            p, t = int(rng.integers(len(r))), int(rng.integers(cfg.vocab))
+            srv.submit_replace(did, p, t)
+            r[p] = t
+    srv.flush()
+    assert srv.stats.grows >= 1  # the race's trigger really fired
+    for did, r in ref.items():
+        assert list(srv.tokens(did)) == r, did
+        doc = srv.docs[did]
+        assert int(doc.state.n_real) == int(doc.valid.sum()) == len(r)
+        ns = neng.full_forward(doc.seq_tokens(), doc.seq_positions())
+        sl = np.asarray(doc.slots)
+        for li in range(len(neng.layers)):
+            np.testing.assert_array_equal(np.asarray(doc.state.codes[li])[sl],
+                                          ns.layers[li].codes)
+        np.testing.assert_allclose(srv.logits(did), neng.logits_at(ns),
+                                   atol=3e-4)
 
 
 def test_next_pow2():

@@ -114,3 +114,31 @@ def test_flash_q_offset_matches_suffix():
                                kv_block=16, q_offset=48)
     np.testing.assert_allclose(np.asarray(tail), np.asarray(full[:, 48:]),
                                atol=1e-5)
+
+
+def test_make_serving_mesh():
+    """1-D serving mesh (DESIGN.md §6): device-count-agnostic default, a
+    prefix of the device list on request, loud failure past the hardware."""
+    from repro.launch.mesh import make_serving_mesh
+
+    mesh = make_serving_mesh()
+    assert mesh.axis_names == ("data",)
+    assert mesh.shape["data"] == jax.device_count()
+    one = make_serving_mesh(1)
+    assert one.shape["data"] == 1
+    with pytest.raises(ValueError, match="devices"):
+        make_serving_mesh(jax.device_count() + 1)
+
+
+def test_serving_batch_sharding_prefix():
+    """The serving batch sharding (the spec every sharded dispatch uses,
+    via BatchedJitEngine._sharded) puts dim 0 on the mesh axis and
+    replicates the rest; unknown axes are rejected."""
+    from repro.launch.mesh import make_serving_mesh
+    from repro.launch.sharding import serving_batch_sharding
+
+    mesh = make_serving_mesh(1)
+    s = serving_batch_sharding(mesh)
+    assert tuple(s.spec) == ("data",)
+    with pytest.raises(ValueError, match="no axis"):
+        serving_batch_sharding(mesh, axis="nope")

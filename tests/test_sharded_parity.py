@@ -1,0 +1,368 @@
+"""Sharded serving differential suite (ISSUE 4 tentpole).
+
+The batch (document) axis of every ``BatchedJitEngine`` dispatch shards
+over a 1-D serving mesh (``launch.mesh.make_serving_mesh``; DESIGN.md §6).
+Contract, per the acceptance criteria:
+
+1. **mesh size 1 is bit-exact vs the pre-mesh path** — a size-1 mesh routes
+   through the identical single-device jit functions, so every state leaf,
+   token buffer and suggestion matches bitwise;
+2. **engine parity across mesh sizes** — every batched entry point
+   (full forward / apply_edits / export_kv / logits_at) produces the same
+   per-document results under mesh sizes 1, 2 and 4 (codes exact, floats
+   to tolerance — per-shard vmaps may batch reductions differently);
+3. **server end-to-end differential** — ``BatchServer`` over a mesh serves
+   mixed edit streams + suggestions (incl. forced defrag and grow) with
+   final tokens/logits identical to the NumPy oracle and suggestions equal
+   to the from-scratch decode oracle;
+4. **scheduler shard-awareness** — dispatch batches pad to a multiple of
+   the mesh's batch axis and members place balanced across per-shard row
+   blocks (greedy LPT).
+
+Mesh sizes above the visible device count skip in-process; a subprocess
+leg forces 4 host devices (``XLA_FLAGS=--xla_force_host_platform_device_count``)
+so the mesh>1 code path runs even in a single-device tier-1 environment.
+The CI ``test-multidevice`` job runs this whole suite under 4 forced
+devices on every PR.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.vq_opt_125m import smoke_config
+from repro.core.incremental import IncrementalEngine
+from repro.launch.mesh import make_serving_mesh
+from repro.models import transformer as T
+from repro.serving.batch_engine import BatchedJitEngine
+from repro.serving.batch_server import BatchServer
+from repro.serving.jit_engine import JitIncrementalEngine
+from repro.serving.suggest import SuggestionEngine, oracle_suggestion
+
+MESH_SIZES = (1, 2, 4)
+
+
+def _need(k: int):
+    if jax.device_count() < k:
+        pytest.skip(f"needs {k} devices, have {jax.device_count()} "
+                    "(run under XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_config(vqt=True)
+    params = jax.device_get(T.init_params(jax.random.PRNGKey(1), cfg))
+    neng = IncrementalEngine(params, cfg)
+    base = BatchedJitEngine(params, cfg, edit_capacity=4, row_capacity=32)
+    return cfg, params, neng, base
+
+
+# ------------------------------------------------------- scheduler host logic
+
+
+def _host_server(n_shards: int, max_batch: int = 8) -> BatchServer:
+    """A BatchServer shell for host-side scheduling unit tests: no params,
+    no devices — only the fields _padded_batch/_place_rows read."""
+    srv = BatchServer.__new__(BatchServer)
+    srv.n_shards = n_shards
+    srv.max_batch = max_batch
+    return srv
+
+
+def test_padded_batch_is_multiple_of_mesh_axis():
+    srv = _host_server(n_shards=4, max_batch=8)
+    for chunk_len in range(1, 9):
+        b = srv._padded_batch(chunk_len)
+        assert b % 4 == 0 and b >= chunk_len
+    assert srv._padded_batch(1) == 4  # at least one row per device
+    assert srv._padded_batch(5) == 8
+    # a non-pow2 max_batch still rounds up to the mesh multiple
+    srv = _host_server(n_shards=4, max_batch=6)
+    assert srv._padded_batch(6) % 4 == 0
+
+
+def test_place_rows_balances_and_covers():
+    srv = _host_server(n_shards=4)
+    weights = [4, 3, 3, 2, 2, 1, 1]
+    rows, loads = srv._place_rows(weights, 8)
+    placed = [i for i in rows if i is not None]
+    assert sorted(placed) == list(range(len(weights)))  # exactly once each
+    assert len(rows) == 8
+    # per-shard blocks are contiguous halves of the padded batch
+    per = 8 // 4
+    block_loads = [sum(weights[i] for i in rows[s * per:(s + 1) * per]
+                       if i is not None) for s in range(4)]
+    assert block_loads == loads
+    # greedy LPT: no shard exceeds the lightest by more than one bucket
+    assert max(loads) - min(loads) <= max(weights)
+    assert sum(loads) == sum(weights)
+
+
+def test_place_rows_identity_for_single_shard():
+    srv = _host_server(n_shards=1)
+    rows, loads = srv._place_rows([2, 1, 3], 4)
+    assert rows == [0, 1, 2, None]  # the pre-mesh dispatch layout
+    assert loads == [6]
+
+
+# ------------------------------------------------------------- engine parity
+
+
+@pytest.mark.parametrize("k", MESH_SIZES)
+def test_engine_parity_across_mesh_sizes(setup, k):
+    """Every batched entry point under a k-way mesh matches the unsharded
+    engine per document: codes/tokens exact, activations to tolerance."""
+    _need(k)
+    cfg, params, neng, base = setup
+    eng = BatchedJitEngine({}, cfg, edit_capacity=4, row_capacity=32,
+                           mesh=make_serving_mesh(k), _weights=base.weights)
+    assert eng.n_shards == k
+    rng = np.random.default_rng(0)
+    B, n = 4, 16
+    toks = rng.integers(0, cfg.vocab, (B, n)).astype(np.int32)
+    poss = np.tile(np.arange(n, dtype=np.int32) * 5, (B, 1))
+    st = eng.batch_full_forward(jnp.asarray(toks), jnp.asarray(poss))
+    st0 = base.batch_full_forward(jnp.asarray(toks), jnp.asarray(poss))
+    np.testing.assert_array_equal(np.asarray(st.codes), np.asarray(st0.codes))
+    np.testing.assert_allclose(np.asarray(st.x), np.asarray(st0.x), atol=1e-5)
+
+    slot = jnp.asarray([[1, 5, -1, -1]] * B, jnp.int32)
+    tok = jnp.asarray([[7, 9, 0, 0]] * B, jnp.int32)
+    s1, o1 = eng.batch_apply_replaces(st, slot, tok)
+    s0, o0 = base.batch_apply_replaces(st0, slot, tok)
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o0))
+    np.testing.assert_array_equal(np.asarray(s1.codes), np.asarray(s0.codes))
+    np.testing.assert_allclose(np.asarray(s1.x), np.asarray(s0.x), atol=1e-5)
+
+    e1, e0 = eng.batch_export_kv(s1), base.batch_export_kv(s0)
+    np.testing.assert_array_equal(np.asarray(e1.order), np.asarray(e0.order))
+    np.testing.assert_array_equal(np.asarray(e1.tokens), np.asarray(e0.tokens))
+    np.testing.assert_allclose(np.asarray(e1.k), np.asarray(e0.k), atol=1e-5)
+
+    idx = jnp.asarray([n - 1] * B, jnp.int32)
+    np.testing.assert_allclose(np.asarray(eng.batch_logits_at(s1, idx)),
+                               np.asarray(base.batch_logits_at(s0, idx)),
+                               atol=1e-4)
+
+
+def test_engine_rejects_indivisible_batch(setup):
+    _need(2)
+    cfg, params, neng, base = setup
+    eng = BatchedJitEngine({}, cfg, edit_capacity=4, row_capacity=32,
+                           mesh=make_serving_mesh(2), _weights=base.weights)
+    toks = jnp.zeros((3, 8), jnp.int32)
+    poss = jnp.tile(jnp.arange(8, dtype=jnp.int32)[None], (3, 1))
+    with pytest.raises(ValueError, match="does not divide"):
+        eng.batch_full_forward(toks, poss)
+
+
+def test_engine_rejects_missing_batch_axis(setup):
+    cfg, params, neng, base = setup
+    with pytest.raises(ValueError, match="no axis"):
+        BatchedJitEngine({}, cfg, mesh=make_serving_mesh(1, axis="batchy"),
+                         _weights=base.weights)
+
+
+def test_server_rejects_indivisible_max_batch(setup):
+    """max_batch must be a multiple of the mesh batch axis, else a full
+    chunk's padded dispatch would exceed the documented cap."""
+    _need(2)
+    cfg, params, neng, base = setup
+    with pytest.raises(ValueError, match="not a multiple"):
+        BatchServer(params, cfg, max_batch=3, mesh=make_serving_mesh(2))
+
+
+# ---------------------------------------------------------- server end-to-end
+
+
+def _mixed_stream(srv: BatchServer, cfg, seed: int, n_docs: int, n_ops: int,
+                  suggest_doc=None, n_new: int = 4):
+    rng = np.random.default_rng(seed)
+    ref = {}
+    for i in range(n_docs):
+        n = int(rng.integers(10, 15))
+        toks = rng.integers(0, cfg.vocab, n)
+        ref[f"d{i}"] = list(toks)
+        srv.open_document(f"d{i}", toks)
+    if suggest_doc is not None:
+        srv.submit_suggest(suggest_doc, n_new)
+    for _ in range(n_ops):
+        did = f"d{int(rng.integers(n_docs))}"
+        r = ref[did]
+        kind = rng.choice(["replace", "insert", "delete"], p=[0.5, 0.3, 0.2])
+        if kind == "insert":
+            p, t = int(rng.integers(len(r) + 1)), int(rng.integers(cfg.vocab))
+            srv.submit_insert(did, p, t)
+            r.insert(p, t)
+        elif kind == "delete" and len(r) > 1:
+            p = int(rng.integers(len(r)))
+            srv.submit_delete(did, p)
+            del r[p]
+        else:
+            p, t = int(rng.integers(len(r))), int(rng.integers(cfg.vocab))
+            srv.submit_replace(did, p, t)
+            r[p] = t
+        if rng.random() < 0.3:
+            srv.step()
+    srv.flush()
+    return ref
+
+
+def _assert_server_matches_numpy(srv, ref, neng, atol=3e-4):
+    for did, r in ref.items():
+        assert list(srv.tokens(did)) == r, did
+        doc = srv.docs[did]
+        ns = neng.full_forward(doc.seq_tokens(), doc.seq_positions())
+        sl = np.asarray(doc.slots)
+        for li in range(len(neng.layers)):
+            np.testing.assert_array_equal(
+                np.asarray(doc.state.codes[li])[sl], ns.layers[li].codes)
+        np.testing.assert_allclose(srv.logits(did), neng.logits_at(ns),
+                                   atol=atol)
+
+
+@pytest.mark.parametrize("k", MESH_SIZES)
+def test_server_differential_vs_numpy(setup, k):
+    """End-to-end: mixed edit streams + a suggestion subscription over a
+    k-way mesh; final tokens/codes/logits match the NumPy oracle and the
+    suggestion equals the from-scratch decode oracle."""
+    _need(k)
+    cfg, params, neng, base = setup
+    srv = BatchServer(params, cfg, edit_capacity=4, row_capacity=16,
+                      max_batch=4, min_doc_capacity=16, pos_pool=2048,
+                      mesh=make_serving_mesh(k))
+    ref = _mixed_stream(srv, cfg, seed=6, n_docs=4, n_ops=40,
+                        suggest_doc="d0")
+    assert srv.pending_count() == 0
+    assert srv.stats.edits_applied == srv.stats.edits_submitted
+    if k > 1:
+        assert srv.stats.sharded_dispatches > 0
+    _assert_server_matches_numpy(srv, ref, neng)
+    sugg = srv.suggest("d0", 4)
+    doc = srv.docs["d0"]
+    oracle_eng = JitIncrementalEngine({}, cfg, edit_capacity=4,
+                                      row_capacity=16, _weights=base.weights)
+    ora = oracle_suggestion(params, cfg, oracle_eng, doc.tokens,
+                            doc.positions, doc.valid, 4)
+    np.testing.assert_array_equal(sugg, ora)
+
+
+@pytest.mark.parametrize("k", MESH_SIZES)
+def test_server_defrag_and_grow_under_mesh(setup, k):
+    """Forced slow paths stay exact over a mesh: a tiny position pool drives
+    defrag, a tiny slot buffer drives grow; both re-ingest per document."""
+    _need(k)
+    cfg, params, neng, base = setup
+    srv = BatchServer(params, cfg, edit_capacity=4, row_capacity=16,
+                      max_batch=k, min_doc_capacity=8, pos_pool=64,
+                      mesh=make_serving_mesh(k))
+    rng = np.random.default_rng(7)
+    ref = {}
+    for i in range(k):  # one doc per shard: slow paths fire on every device
+        toks = rng.integers(0, cfg.vocab, 7)
+        ref[f"d{i}"] = list(toks)
+        srv.open_document(f"d{i}", toks)
+    for _ in range(8):  # hammer one insertion point -> defrag; fill -> grow
+        for i in range(k):
+            t = int(rng.integers(cfg.vocab))
+            srv.submit_insert(f"d{i}", 3, t)
+            ref[f"d{i}"].insert(3, t)
+        srv.flush()
+    assert srv.stats.defrags >= 1
+    assert srv.stats.grows >= 1
+    _assert_server_matches_numpy(srv, ref, neng)
+
+
+def test_mesh1_bit_exact_vs_premesh(setup):
+    """A size-1 mesh must reproduce the mesh=None scheduler bit-for-bit:
+    same dispatch layout, same compiled steps, bitwise-identical states."""
+    cfg, params, neng, base = setup
+    srv_a = BatchServer(params, cfg, edit_capacity=4, row_capacity=16,
+                        max_batch=4, min_doc_capacity=16, pos_pool=2048)
+    srv_b = BatchServer(params, cfg, edit_capacity=4, row_capacity=16,
+                        max_batch=4, min_doc_capacity=16, pos_pool=2048,
+                        mesh=make_serving_mesh(1))
+    ref_a = _mixed_stream(srv_a, cfg, seed=11, n_docs=3, n_ops=24,
+                          suggest_doc="d1")
+    ref_b = _mixed_stream(srv_b, cfg, seed=11, n_docs=3, n_ops=24,
+                          suggest_doc="d1")
+    assert ref_a == ref_b
+    assert srv_b.stats.sharded_dispatches == 0
+    for did in ref_a:
+        doc_a, doc_b = srv_a.docs[did], srv_b.docs[did]
+        np.testing.assert_array_equal(doc_a.tokens, doc_b.tokens)
+        np.testing.assert_array_equal(doc_a.positions, doc_b.positions)
+        for leaf_a, leaf_b in zip(doc_a.state, doc_b.state):
+            np.testing.assert_array_equal(np.asarray(leaf_a),
+                                          np.asarray(leaf_b))
+    np.testing.assert_array_equal(srv_a.suggestion("d1"),
+                                  srv_b.suggestion("d1"))
+
+
+def test_forced_multidevice_subprocess():
+    """mesh>1 coverage even in a single-device environment: force 4 host
+    devices in a subprocess (the flag must precede jax init) and run a
+    compact server-vs-NumPy differential there."""
+    code = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        os.environ["JAX_PLATFORMS"] = "cpu"
+        import jax, numpy as np
+        from repro.configs.vq_opt_125m import smoke_config
+        from repro.core.incremental import IncrementalEngine
+        from repro.launch.mesh import make_serving_mesh
+        from repro.models import transformer as T
+        from repro.serving.batch_server import BatchServer
+
+        assert jax.device_count() == 4
+        cfg = smoke_config(vqt=True)
+        params = jax.device_get(T.init_params(jax.random.PRNGKey(1), cfg))
+        neng = IncrementalEngine(params, cfg)
+        srv = BatchServer(params, cfg, edit_capacity=4, row_capacity=16,
+                          max_batch=4, min_doc_capacity=16, pos_pool=2048,
+                          mesh=make_serving_mesh())
+        rng = np.random.default_rng(0)
+        ref = {}
+        for i in range(4):
+            toks = rng.integers(0, cfg.vocab, int(rng.integers(10, 14)))
+            ref[f"d{i}"] = list(toks)
+            srv.open_document(f"d{i}", toks)
+        for _ in range(12):
+            did = f"d{int(rng.integers(4))}"
+            r = ref[did]
+            kind = rng.choice(["replace", "insert", "delete"], p=[.5, .3, .2])
+            if kind == "insert":
+                p, t = int(rng.integers(len(r) + 1)), int(rng.integers(cfg.vocab))
+                srv.submit_insert(did, p, t); r.insert(p, t)
+            elif kind == "delete" and len(r) > 1:
+                p = int(rng.integers(len(r)))
+                srv.submit_delete(did, p); del r[p]
+            else:
+                p, t = int(rng.integers(len(r))), int(rng.integers(cfg.vocab))
+                srv.submit_replace(did, p, t); r[p] = t
+        srv.flush()
+        assert srv.stats.sharded_dispatches > 0
+        for did, r in ref.items():
+            assert list(srv.tokens(did)) == r
+            doc = srv.docs[did]
+            ns = neng.full_forward(doc.seq_tokens(), doc.seq_positions())
+            np.testing.assert_allclose(srv.logits(did), neng.logits_at(ns),
+                                       atol=3e-4)
+        print("SHARDED-OK")
+        """
+    )
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    res = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, res.stderr
+    assert "SHARDED-OK" in res.stdout
