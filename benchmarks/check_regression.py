@@ -62,6 +62,40 @@ GATES = {
             "suggestions_match_oracle": {"must_equal": True},
         },
     },
+    # ISSUE 4's benchmark, gated since ISSUE 5: deterministic parity bits
+    # and the scheduler's placement quality (run under 4 forced host
+    # devices — see the bench-gate job's XLA_FLAGS)
+    "sharded_serving": {
+        "bench": "BENCH_sharded_serving.json",
+        "baseline": "BASELINE_sharded_serving.json",
+        "key": "mesh_size",
+        "identity": ("doc_len", "n_docs", "n_edits"),
+        "metrics": {
+            "tokens_match": {"must_equal": True},
+            "oracle_match": {"must_equal": True},
+            "logits_close_vs_mesh1": {"must_equal": True},
+            "mean_shard_imbalance": {"higher_is_better": False,
+                                     "abs_tol": 0.05},
+            "batch_dispatches": {"higher_is_better": False, "abs_tol": 2},
+        },
+    },
+    # ISSUE 5: tiered-store churn under a zipf stream. Counters are
+    # deterministic under the seeded stream; rehydrate/full-forward
+    # latencies are wall-clock and never gated.
+    "state_churn": {
+        "bench": "BENCH_state_churn.json",
+        "baseline": "BASELINE_state_churn.json",
+        "key": "workload",
+        "identity": ("n_docs", "doc_len", "n_edits", "budget_docs", "n_new"),
+        "metrics": {
+            "hot_hit_rate": {"higher_is_better": True, "abs_tol": 0.02},
+            "evictions": {"higher_is_better": False, "abs_tol": 2},
+            "spills": {"higher_is_better": False, "abs_tol": 2},
+            "rehydrations": {"higher_is_better": False, "abs_tol": 2},
+            "oracle_match": {"must_equal": True},
+            "leak_free": {"must_equal": True},
+        },
+    },
 }
 
 

@@ -111,6 +111,14 @@ def main():
                                n_edits=48 if args.full else 24)
     summary.append({"benchmark": "sharded_serving", "rows": recs})
 
+    print(f"\n=== Tiered state churn: evict / persist / rehydrate "
+          f"({time.time()-t0:.0f}s) ===")
+    from benchmarks import state_churn
+
+    recs = state_churn.run(n_docs=16 if args.full else 8,
+                           n_edits=64 if args.full else 32)
+    summary.append({"benchmark": "state_churn", "rows": recs})
+
     if not args.skip_accuracy:
         print(f"\n=== Table 1: accuracy parity ({time.time()-t0:.0f}s) ===")
         from benchmarks import table1_accuracy

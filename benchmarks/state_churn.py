@@ -1,0 +1,207 @@
+"""Tiered state-churn benchmark (ISSUE 5 tentpole): a fleet larger than the
+device budget, under a zipf-touch edit stream.
+
+The production question the tiered store answers: when documents ≫ budget,
+what does an evicted document's next touch cost? The store's answer is a
+**rehydration** — a pure snapshot re-upload, bit-exact — versus the naive
+fallback of dropping evicted state and paying a ``full_forward`` recompute.
+This benchmark measures both and the policy quantity in between:
+
+* ``hot_hit_rate`` — fraction of device-state touches served without any
+  rehydration (zipf skew means the popular documents stay hot; the LRU
+  policy's first-class number);
+* ``evictions`` / ``spills`` / ``rehydrations`` — deterministic churn
+  counters under the seeded stream (gated in CI);
+* ``rehydrate_warm_ms`` / ``rehydrate_cold_ms`` vs ``full_forward_ms`` —
+  the latency of a warm/cold re-upload against the recompute it replaces
+  (wall-clock: reported, never gated);
+* ``oracle_match`` — final tokens AND logits of every document are
+  bit-identical to an unbounded-budget server fed the same stream (the
+  rehydration-exactness contract, DESIGN.md §7);
+* ``leak_free`` — closing every document at the end leaves zero bytes in
+  every tier and an empty spill directory.
+
+Emits ``results/BENCH_state_churn.json`` plus name,value CSV lines; gated
+against ``results/BASELINE_state_churn.json`` by
+``benchmarks.check_regression``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import ensure_results
+
+MIX = {"replace": 0.6, "insert": 0.25, "delete": 0.15}
+
+
+def _zipf_weights(n: int, a: float) -> np.ndarray:
+    w = 1.0 / np.power(np.arange(1, n + 1, dtype=np.float64), a)
+    return w / w.sum()
+
+
+def _submit_one(srv, refs, did: str, rng, vocab: int) -> None:
+    ops, ps = list(MIX), np.asarray([MIX[k] for k in MIX])
+    r = refs[did]
+    op = str(rng.choice(ops, p=ps / ps.sum()))
+    if op == "delete" and len(r) <= 2:
+        op = "replace"
+    if op == "replace":
+        pos, tok = int(rng.integers(len(r))), int(rng.integers(vocab))
+        srv.submit_replace(did, pos, tok)
+        r[pos] = tok
+    elif op == "insert":
+        pos, tok = int(rng.integers(len(r) + 1)), int(rng.integers(vocab))
+        srv.submit_insert(did, pos, tok)
+        r.insert(pos, tok)
+    else:
+        pos = int(rng.integers(len(r)))
+        srv.submit_delete(did, pos)
+        del r[pos]
+
+
+def run(n_docs: int = 8, doc_len: int = 48, n_edits: int = 32,
+        budget_docs: int = 3, n_new: int = 4, zipf_a: float = 1.2,
+        seed: int = 0, check_oracle: bool = True) -> list[dict]:
+    import jax
+
+    from repro.configs.vq_opt_125m import smoke_config
+    from repro.models import transformer as T
+    from repro.serving.batch_server import BatchServer
+    from repro.serving.jit_engine import state_nbytes_for_config
+
+    cfg = smoke_config(vqt=True)
+    params = jax.device_get(T.init_params(jax.random.PRNGKey(seed), cfg))
+    min_cap = 64  # one capacity bucket for the whole fleet
+    spill = tempfile.mkdtemp(prefix="state-churn-")
+    per = state_nbytes_for_config(cfg, min_cap)
+
+    def make(budget_docs_k=None):
+        if budget_docs_k is None:
+            return BatchServer(params, cfg, edit_capacity=4, row_capacity=64,
+                               max_batch=2, min_doc_capacity=min_cap)
+        return BatchServer(
+            params, cfg, edit_capacity=4, row_capacity=64, max_batch=2,
+            min_doc_capacity=min_cap,
+            device_budget_bytes=int(budget_docs_k * per * 1.25),  # caches too
+            host_budget_bytes=2 * per, spill_dir=spill)
+
+    doc_rng = np.random.default_rng(seed)
+    base_docs = {f"d{i}": list(doc_rng.integers(0, cfg.vocab, doc_len))
+                 for i in range(n_docs)}
+    srv = make(budget_docs)
+    srv.open_documents({d: list(t) for d, t in base_docs.items()})
+    refs = {d: list(t) for d, t in base_docs.items()}
+    weights = _zipf_weights(n_docs, zipf_a)
+    rng = np.random.default_rng(seed + 1)
+    t0 = time.perf_counter()
+    for t in range(n_edits):
+        did = f"d{int(rng.choice(n_docs, p=weights))}"
+        _submit_one(srv, refs, did, rng, cfg.vocab)
+        if t % 4 == 0:
+            srv.submit_suggest(did, n_new)
+        srv.flush()
+    wall = time.perf_counter() - t0
+    st = srv.stats
+    # gated, deterministic churn counters — recorded BEFORE the latency
+    # micro-benchmark below adds its own forced evictions
+    gated = dict(hot_hit_rate=round(st.hot_hit_rate, 4),
+                 evictions=st.evictions, spills=st.spills,
+                 rehydrations=st.rehydrations)
+    print(f"state_churn,docs={n_docs},budget_docs={budget_docs},"
+          f"hot_hit_rate={gated['hot_hit_rate']},"
+          f"evictions={gated['evictions']},spills={gated['spills']},"
+          f"rehydrations={gated['rehydrations']}")
+
+    # ---- rehydrate latency vs the full_forward fallback (wall, ungated)
+    probe_doc = "d0"
+    srv.logits(probe_doc)  # make hot, warm the logits jit
+    reps = 3
+
+    def timed(tier):
+        total = 0.0
+        for _ in range(reps):
+            srv.evict(probe_doc, tier)
+            t1 = time.perf_counter()
+            jax.block_until_ready(
+                srv.store.ensure_hot(srv.docs[probe_doc]))
+            total += time.perf_counter() - t1
+        return total / reps
+
+    warm_s = timed("warm")
+    cold_s = timed("cold")
+    eng = srv.engine(srv.C, srv.R)
+    doc = srv.docs[probe_doc]
+    toks, poss, vals = (np.array(doc.tokens, copy=True),
+                        np.array(doc.positions, copy=True),
+                        np.array(doc.valid, copy=True))
+    jax.block_until_ready(eng.full_forward(toks, poss, vals))  # warm the jit
+    t1 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(eng.full_forward(toks, poss, vals))
+    ff_s = (time.perf_counter() - t1) / reps
+    print(f"state_churn,rehydrate_warm_ms={warm_s*1e3:.2f},"
+          f"rehydrate_cold_ms={cold_s*1e3:.2f},"
+          f"full_forward_ms={ff_s*1e3:.2f},"
+          f"speedup_vs_fallback={ff_s/max(warm_s, 1e-9):.1f}x")
+
+    # ---- oracle leg: unbounded server, same stream, bit-identical results
+    oracle_match = True
+    if check_oracle:
+        orc = make(None)
+        orc.open_documents({d: list(t) for d, t in base_docs.items()})
+        orefs = {d: list(t) for d, t in base_docs.items()}
+        orng = np.random.default_rng(seed + 1)
+        for t in range(n_edits):
+            did = f"d{int(orng.choice(n_docs, p=weights))}"
+            _submit_one(orc, orefs, did, orng, cfg.vocab)
+            if t % 4 == 0:
+                orc.submit_suggest(did, n_new)
+            orc.flush()
+        for d in refs:
+            if list(srv.tokens(d)) != orefs[d]:
+                oracle_match = False
+            if not np.array_equal(srv.logits(d), orc.logits(d)):
+                oracle_match = False
+            so, sb = orc.suggestion(d), srv.suggestion(d)
+            if (so is None) != (sb is None) or (
+                    so is not None and not np.array_equal(so, sb)):
+                oracle_match = False
+        print(f"state_churn,oracle_match={oracle_match}")
+
+    # ---- teardown: closing the fleet must leak nothing
+    for d in list(srv.docs):
+        srv.close_document(d)
+    leak_free = (st.bytes_hot == 0 and st.bytes_warm == 0
+                 and st.bytes_cold == 0 and st.bytes_suggest == 0
+                 and (not os.path.isdir(spill) or not os.listdir(spill)))
+    print(f"state_churn,leak_free={leak_free}")
+
+    rec = {
+        "workload": "zipf",
+        "n_docs": n_docs,
+        "doc_len": doc_len,
+        "n_edits": n_edits,
+        "budget_docs": budget_docs,
+        "n_new": n_new,
+        **gated,
+        "oracle_match": bool(oracle_match),
+        "leak_free": bool(leak_free),
+        "wall_s_per_edit": round(wall / max(n_edits, 1), 5),
+        "rehydrate_warm_ms": round(warm_s * 1e3, 3),
+        "rehydrate_cold_ms": round(cold_s * 1e3, 3),
+        "full_forward_ms": round(ff_s * 1e3, 3),
+    }
+    out = os.path.join(ensure_results(), "BENCH_state_churn.json")
+    with open(out, "w") as f:
+        json.dump([rec], f, indent=2)
+    print(f"wrote {out}")
+    return [rec]
+
+
+if __name__ == "__main__":
+    run()

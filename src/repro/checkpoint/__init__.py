@@ -1,1 +1,4 @@
-from repro.checkpoint.store import save_pytree, restore_pytree, save_train_state, restore_train_state
+from repro.checkpoint.store import (
+    save_pytree, restore_pytree, save_train_state, restore_train_state,
+    save_document_state, restore_document_state,
+)

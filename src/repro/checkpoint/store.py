@@ -58,3 +58,62 @@ def save_train_state(path: str, state, step: Optional[int] = None) -> None:
 
 def restore_train_state(path: str, like):
     return restore_pytree(path, like)
+
+
+# --------------------------------------------------------------------------
+# Serving document state (the state-store cold tier, DESIGN.md §7)
+#
+# A serving document's durable incremental state is more than a pytree of
+# arrays: the position allocator's id sequence and the suggestion
+# watermarks travel with the ``JitState`` so a restore (same process or a
+# later one) reproduces the document exactly — rehydration is a pure
+# re-upload, never a recompute. Everything lives in ONE npz (no sidecar):
+# state leaves under ``state/<field>``, the allocator snapshot under
+# ``allocator/ids``, and the scalar metadata as a JSON string array
+# (unicode arrays load without pickle).
+
+_DOC_META_KEY = "doc_meta/json"
+
+
+def save_document_state(path: str, state, *, allocator_ids,
+                        invalid_from: Optional[int] = None,
+                        touched_from: Optional[int] = None,
+                        extra: Optional[dict] = None) -> None:
+    """Serialize a full serving ``JitState`` plus its host-side durable
+    companions: the allocator's position-id snapshot and the suggestion
+    watermarks (``invalid_from`` / ``touched_from``, DESIGN.md §5). The
+    state may hold device or host arrays; leaves are materialized to numpy.
+    ``extra`` merges additional JSON-serializable metadata (e.g. a doc id)."""
+    from repro.serving.jit_engine import JitState
+
+    if not isinstance(state, JitState):
+        raise TypeError(f"expected a JitState, got {type(state).__name__}")
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays = {f"state/{name}": np.asarray(leaf)
+              for name, leaf in zip(JitState._fields, state)}
+    arrays["allocator/ids"] = np.asarray(allocator_ids, np.int32)
+    meta = dict(extra or {})
+    meta["invalid_from"] = invalid_from
+    meta["touched_from"] = touched_from
+    arrays[_DOC_META_KEY] = np.asarray(json.dumps(meta))
+    np.savez(path, **arrays)
+
+
+def restore_document_state(path: str):
+    """Inverse of ``save_document_state``. Returns
+    ``(state, allocator_ids, meta)`` where ``state`` is a host-array
+    ``JitState`` (upload with ``serving.jit_engine.state_from_host``),
+    ``allocator_ids`` the int32 position-id snapshot, and ``meta`` the
+    metadata dict (watermarks restored to ``None`` where saved as such).
+    Bit-exact: every leaf round-trips through npz unchanged."""
+    from repro.serving.jit_engine import JitState
+
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    missing = [f for f in JitState._fields if f"state/{f}" not in data]
+    if missing:
+        raise KeyError(f"document checkpoint missing state fields {missing}")
+    state = JitState(*(data[f"state/{f}"] for f in JitState._fields))
+    if "allocator/ids" not in data:
+        raise KeyError("document checkpoint missing allocator/ids")
+    meta = json.loads(str(data[_DOC_META_KEY])) if _DOC_META_KEY in data else {}
+    return state, data["allocator/ids"], meta

@@ -1,8 +1,13 @@
 """Serving launcher — the incremental writing-assistant loop.
 
-CPU demo:
+Single-document op-count demo (the paper's measurement):
   PYTHONPATH=src python -m repro.launch.serve --arch vq-opt-125m --smoke \
       --doc-len 128 --edits 20
+
+Tiered-fleet demo (ISSUE 5: more sessions than the device budget admits;
+evicted documents rehydrate bit-exactly on their next touch):
+  PYTHONPATH=src python -m repro.launch.serve --arch vq-opt-125m --smoke \
+      --tiered --docs 8 --budget-docs 3 --doc-len 48 --edits 40
 """
 from __future__ import annotations
 
@@ -18,22 +23,7 @@ from repro.models import transformer as T
 from repro.serving.engine import IncrementalServer
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="vq-opt-125m")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--doc-len", type=int, default=128)
-    ap.add_argument("--edits", type=int, default=20)
-    ap.add_argument("--ckpt", default=None)
-    args = ap.parse_args()
-
-    cfg = get_config(args.arch, smoke=args.smoke)
-    assert cfg.vqt is not None, "serve demo requires a VQT config (e.g. vq-opt-125m)"
-    params = T.init_params(jax.random.PRNGKey(0), cfg)
-    if args.ckpt:
-        from repro.checkpoint import restore_pytree
-
-        params = restore_pytree(args.ckpt, params)
+def run_single(args, cfg, params) -> None:
     server = IncrementalServer(jax.device_get(params), cfg)
 
     corpus = SyntheticCorpus(vocab=cfg.vocab, seed=0)
@@ -55,6 +45,87 @@ def main():
     s = server.stats
     print(f"\ntotals: edits={s.edits} defrags={s.defrags} "
           f"cumulative speedup={s.speedup:.1f}X")
+
+
+def run_tiered(args, cfg, params) -> None:
+    """A fleet bigger than the device budget: the batch server's tiered
+    state store (DESIGN.md §7) evicts least-recently-touched sessions to
+    host RAM / disk and rehydrates them transparently as the zipf-skewed
+    edit stream touches them again."""
+    from repro.common.bucketing import next_pow2
+    from repro.serving.batch_server import BatchServer
+    from repro.serving.jit_engine import state_nbytes_for_config
+
+    # size the budget at the capacity the server will actually bucket to —
+    # documents occupy next_pow2(doc_len) slots, not doc_len
+    min_cap = next_pow2(max(64, args.doc_len))
+    per = state_nbytes_for_config(cfg, min_cap)
+    budget = int(args.budget_docs * per * 1.25)
+    server = BatchServer(jax.device_get(params), cfg, edit_capacity=4,
+                         row_capacity=64, max_batch=2,
+                         min_doc_capacity=min_cap,
+                         device_budget_bytes=budget,
+                         host_budget_bytes=2 * per)
+    corpus = SyntheticCorpus(vocab=cfg.vocab, seed=0)
+    docs = {f"d{i}": list(corpus.document(args.doc_len, i))
+            for i in range(args.docs)}
+    server.open_documents(docs)
+    per_mb = per / 2**20
+    print(f"opened {args.docs} sessions of ~{per_mb:.1f} MiB state under a "
+          f"{budget/2**20:.1f} MiB device budget "
+          f"(~{args.budget_docs} resident documents)")
+
+    rng = np.random.default_rng(1)
+    w = 1.0 / np.arange(1, args.docs + 1) ** 1.2
+    w /= w.sum()
+    for i in range(args.edits):
+        did = f"d{int(rng.choice(args.docs, p=w))}"
+        tier = server.tier(did)
+        pos = int(rng.integers(len(server.docs[did].slots)))
+        server.submit_replace(did, pos, int(rng.integers(cfg.vocab)))
+        server.flush()
+        s = server.stats
+        print(f"edit {i:3d} -> {did} (was {tier:4s})  tiers "
+              f"hot={s.docs_hot} warm={s.docs_warm} cold={s.docs_cold}  "
+              f"bytes hot={s.bytes_hot/2**20:5.1f}MiB "
+              f"warm={s.bytes_warm/2**20:5.1f}MiB "
+              f"cold={s.bytes_cold/2**20:5.1f}MiB")
+    s = server.stats
+    print(f"\ntotals: edits={s.edits_applied} evictions={s.evictions} "
+          f"spills={s.spills} rehydrations={s.rehydrations} "
+          f"hot_hit_rate={s.hot_hit_rate:.2f}")
+    for did in list(server.docs):
+        server.close_document(did)
+    print(f"closed all sessions: bytes hot/warm/cold/suggest = "
+          f"{s.bytes_hot}/{s.bytes_warm}/{s.bytes_cold}/{s.bytes_suggest}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="vq-opt-125m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--doc-len", type=int, default=128)
+    ap.add_argument("--edits", type=int, default=20)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--tiered", action="store_true",
+                    help="multi-session fleet under a device-memory budget")
+    ap.add_argument("--docs", type=int, default=8,
+                    help="(--tiered) sessions to open")
+    ap.add_argument("--budget-docs", type=int, default=3,
+                    help="(--tiered) device budget, in resident documents")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    assert cfg.vqt is not None, "serve demo requires a VQT config (e.g. vq-opt-125m)"
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    if args.ckpt:
+        from repro.checkpoint import restore_pytree
+
+        params = restore_pytree(args.ckpt, params)
+    if args.tiered:
+        run_tiered(args, cfg, params)
+    else:
+        run_single(args, cfg, params)
 
 
 if __name__ == "__main__":

@@ -7,6 +7,9 @@ from repro.serving.batch_engine import (
     BatchedJitEngine, BatchedJitState, stack_states, unstack_state,
 )
 from repro.serving.batch_server import BatchServer, BatchStats, next_pow2
+from repro.serving.state_store import (
+    DeviceBudgetError, StateStore, TIER_COLD, TIER_HOT, TIER_VOID, TIER_WARM,
+)
 from repro.serving.suggest import (
     PositionHeadroomError, SuggestionEngine, SuggestStats, oracle_suggestion,
 )

@@ -46,7 +46,18 @@ The serving model (ROADMAP north star: heavy concurrent traffic):
    Defrag / grow / overflow-fallback re-ingests and suggestion refreshes
    are per-document host-side slow paths and are untouched by sharding; a
    mesh of size 1 (or ``mesh=None``) is the pre-mesh scheduler bit-for-bit
-   (tests/test_sharded_parity.py).
+   (tests/test_sharded_parity.py);
+8. document state is a **tiered, budgeted resource** (DESIGN.md §7,
+   ``repro.serving.state_store``): with ``device_budget_bytes=`` the fleet
+   may exceed device memory — least-recently-touched documents evict to a
+   host-RAM snapshot (warm) and, past ``host_budget_bytes=``, to disk
+   (cold), then **rehydrate bit-exactly on next touch** (a pure re-upload,
+   never a recompute). ``close_document`` ends a session and releases its
+   slots, allocator and caches; ``pin``/``unpin`` exempt latency-critical
+   documents from eviction; suggestion decode caches count toward the
+   budget as soft state (droppable independently — the next refresh
+   re-prefills from the KV export). Per-tier byte/doc counts and the
+   eviction/rehydration counters live in ``BatchStats``.
 
 Scheduler invariants (property-tested in tests/test_batch_scheduler.py):
 every submitted edit is applied exactly once; all bucket capacities
@@ -85,8 +96,9 @@ from repro.serving.batch_engine import (
     BatchedJitEngine, stack_states, unstack_state,
 )
 from repro.serving.jit_engine import (
-    JitState, OP_DELETE, OP_INSERT, OP_REPLACE,
+    JitState, OP_DELETE, OP_INSERT, OP_REPLACE, state_nbytes_for,
 )
+from repro.serving.state_store import StateStore
 from repro.serving.suggest import (
     PositionHeadroomError, SuggestionEngine, SuggestStats,
 )
@@ -131,10 +143,37 @@ class BatchStats:
     # ---- per-device dispatch balance (mesh>1 serving, DESIGN.md §6)
     sharded_dispatches: int = 0  # dispatches issued over a mesh of size > 1
     shard_imbalance_sum: float = 0.0  # sum over dispatches of (max-min)/max load
+    # ---- tiered state residency (state_store, DESIGN.md §7). Byte and doc
+    # counters are maintained by the StateStore and reconcile exactly
+    # against a recount of the underlying objects
+    # (tests/test_state_store.py::test_stats_reconcile).
+    closes: int = 0  # close_document calls (docs stays = documents opened)
+    bytes_hot: int = 0  # device-resident document states
+    bytes_warm: int = 0  # host-RAM snapshots
+    bytes_cold: int = 0  # on-disk spills
+    bytes_suggest: int = 0  # device-resident suggestion decode caches (soft)
+    docs_hot: int = 0
+    docs_warm: int = 0
+    docs_cold: int = 0
+    evictions: int = 0  # hot -> warm demotions
+    spills: int = 0  # warm -> cold demotions
+    rehydrations: int = 0  # warm/cold -> hot re-uploads (bit-exact)
+    rollback_rebuilds: int = 0  # void -> hot full-forward rebuilds (rollback
+    # corner: the pre-take copy was consumed by a mid-take re-ingest)
+    state_touches: int = 0  # device-state reads routed through the store
+    hot_hits: int = 0  # touches served without a rehydration/rebuild
 
     @property
     def mean_batch(self) -> float:
         return self.batched_docs / max(self.batch_steps, 1)
+
+    @property
+    def hot_hit_rate(self) -> float:
+        """Fraction of device-state touches served from the hot tier — the
+        tiered store's first-class benchmarked quantity
+        (benchmarks/state_churn.py). 1.0 = the budget never forced a
+        rehydration."""
+        return self.hot_hits / max(self.state_touches, 1)
 
     @property
     def mean_shard_imbalance(self) -> float:
@@ -157,7 +196,10 @@ class _BatchDoc:
     n_cap: int
     row_capacity: int  # per-document R; doubles on overflow
     allocator: PositionAllocator  # sequence-ordered gapped position ids
-    state: JitState  # device state at padded shape
+    state: Optional[JitState]  # device state at padded shape (None = evicted)
+    state_epoch: int = 0  # bumped on every content-CHANGING state replacement
+    # (dispatch adoption, re-ingest) but NOT on rehydration, which re-uploads
+    # identical bits — the rollback path uses it to tell the two apart
     pending: deque = field(default_factory=deque)  # FIFO of (op, pos, tok)
     n_virtual: int = 0  # length after every queued edit applies
     # ---- suggestion serving (DESIGN.md §5)
@@ -185,7 +227,10 @@ class BatchServer:
                  row_capacity: int = 64, max_batch: int = 8,
                  min_doc_capacity: int = 16, use_patch_kernel: bool = False,
                  pos_pool: Optional[int] = None, mesh=None,
-                 batch_axis: str = "data"):
+                 batch_axis: str = "data",
+                 device_budget_bytes: Optional[int] = None,
+                 host_budget_bytes: Optional[int] = None,
+                 spill_dir: Optional[str] = None):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         self.cfg = cfg
@@ -220,12 +265,30 @@ class BatchServer:
         self.stats = BatchStats()
         self._sugg: Optional[SuggestionEngine] = None
         self._params = params
+        # tiered residency (DESIGN.md §7): budget=None still tracks bytes
+        # and tiers — accounting is always on, eviction only under a budget
+        self.store = StateStore(
+            docs=self.docs, stats=self.stats,
+            drop_suggest=self._drop_suggest_cache, reingest=self._reingest,
+            device_budget_bytes=device_budget_bytes,
+            host_budget_bytes=host_budget_bytes, spill_dir=spill_dir)
+
+    def _drop_suggest_cache(self, doc_id: str) -> None:
+        """Release one document's suggestion decode cache (the store's
+        soft-state reclamation hook; the suggester's listener reports the
+        freed bytes back to the store)."""
+        if self._sugg is not None:
+            self._sugg.drop(doc_id)
 
     @property
     def suggester(self) -> SuggestionEngine:
-        """The (lazily built) suggestion engine shared by every document."""
+        """The (lazily built) suggestion engine shared by every document.
+        Its per-document decode caches report their device bytes to the
+        state store — soft state under the serving budget."""
         if self._sugg is None:
-            self._sugg = SuggestionEngine(self._params, self.cfg)
+            self._sugg = SuggestionEngine(
+                self._params, self.cfg,
+                on_cache_bytes=self.store.note_suggest_bytes)
         return self._sugg
 
     @property
@@ -346,6 +409,11 @@ class BatchServer:
             for lo in range(0, len(members), self.max_batch):
                 chunk = members[lo:lo + self.max_batch]
                 B_pad = self._padded_batch(len(chunk))
+                # admission control BEFORE the ingest dispatch: evict LRU
+                # residents (suggestion caches first, then hot states) until
+                # the chunk's states fit the device budget
+                self.store.admit(
+                    len(chunk) * state_nbytes_for(n_cap, eng.L, eng.meta))
                 # ingest work scales with real length: balance it per shard
                 rows, loads = self._place_rows([c[4] for c in chunk], B_pad)
                 row_of = [chunk[i] if i is not None else chunk[0] for i in rows]
@@ -360,14 +428,54 @@ class BatchServer:
                     if i is None:
                         continue
                     doc_id, padded, valid, positions, n, n_cap, alloc = chunk[i]
-                    self.docs[doc_id] = _BatchDoc(
+                    doc = _BatchDoc(
                         doc_id=doc_id, tokens=padded, valid=valid,
                         positions=positions, slots=list(range(n)),
                         free=list(range(n_cap - 1, n - 1, -1)), n_cap=n_cap,
                         row_capacity=min(self.R, n_cap), allocator=alloc,
                         state=unstack_state(bstate, b), n_virtual=n)
+                    self.docs[doc_id] = doc
+                    self.store.register(doc)
                     self.stats.docs += 1
                     self.stats.full_forwards += 1
+
+    def close_document(self, doc_id: str) -> None:
+        """End a session: release the document's slot rows, allocator,
+        device/warm/cold state and suggestion caches. The inverse of
+        ``open_document`` — leak-free under open→edit→close churn
+        (tests/test_state_store.py::test_close_document_no_leak). Pending
+        (unflushed) edits are discarded with the session."""
+        doc = self.docs.pop(doc_id)  # KeyError for unknown ids
+        self._drop_suggest_cache(doc_id)  # listener zeroes its byte account
+        self.store.close(doc)
+        doc.pending.clear()
+        doc.suggestion = None
+        self.stats.closes += 1
+
+    def pin(self, doc_id: str) -> None:
+        """Exempt a latency-critical document from eviction (rehydrating it
+        now if needed, so a pinned document is always dispatch-ready). Its
+        suggestion decode cache stays evictable — soft state."""
+        if doc_id not in self.docs:
+            raise KeyError(doc_id)
+        self.store.pin(doc_id)
+
+    def unpin(self, doc_id: str) -> None:
+        self.store.unpin(doc_id)
+
+    def evict(self, doc_id: str, tier: str = "warm") -> str:
+        """Force-demote a document's state to ``"warm"`` (host RAM) or
+        ``"cold"`` (disk). Its next touch — an edit dispatch, suggestion
+        refresh or logits read — rehydrates it transparently and
+        bit-exactly. Mostly a test/benchmark hook; production eviction is
+        the budget's job. Returns the resulting tier."""
+        return self.store.demote(self.docs[doc_id], tier)
+
+    def tier(self, doc_id: str) -> str:
+        """Residency tier of an open document: "hot", "warm" or "cold"."""
+        if doc_id not in self.docs:
+            raise KeyError(doc_id)
+        return self.store.tier(doc_id)
 
     # ------------------------------------------------------------- submits
 
@@ -443,16 +551,38 @@ class BatchServer:
     def _snapshot(self, doc: _BatchDoc) -> tuple:
         return (doc.tokens.copy(), doc.valid.copy(), doc.positions.copy(),
                 list(doc.slots), list(doc.free), doc.n_cap, doc.row_capacity,
-                doc.allocator.snapshot(), doc.state, deque(doc.pending),
-                doc.n_virtual, doc.invalid_from, doc.touched_from,
-                doc.suggest_fresh)
+                doc.allocator.snapshot(), doc.state, doc.state_epoch,
+                deque(doc.pending), doc.n_virtual, doc.invalid_from,
+                doc.touched_from, doc.suggest_fresh)
 
     def _restore(self, doc: _BatchDoc, snap: tuple) -> None:
         (doc.tokens, doc.valid, doc.positions, doc.slots, doc.free, doc.n_cap,
-         doc.row_capacity, alloc_ids, doc.state, doc.pending,
+         doc.row_capacity, alloc_ids, state, epoch, doc.pending,
          doc.n_virtual, doc.invalid_from, doc.touched_from,
          doc.suggest_fresh) = snap
         doc.allocator.restore(alloc_ids)
+        # Device-state rollback is residency-aware and NEVER raises (the
+        # except path restores many docs in a row — one failure must not
+        # strand the rest). Three cases:
+        # 1. epoch unchanged — the device-state CONTENT was never replaced
+        #    (at most evicted and/or rehydrated, both bit-preserving), and
+        #    the store's accounting already matches wherever it lives now;
+        # 2. a mid-take re-ingest (grow/defrag) replaced the content, but
+        #    the snapshot still references the exact pre-take state —
+        #    re-adopt it (the store recounts bytes and discards the
+        #    superseded copy);
+        # 3. the doc entered the take evicted (snapshot state is None) and a
+        #    mid-take re-ingest consumed its warm/cold copy — the restored
+        #    mirrors are the only source of truth. Mark the doc void: the
+        #    next touch rebuilds it with a full forward (the same semantics
+        #    as any re-ingest slow path), where admission/device failures
+        #    are ordinary and recoverable.
+        if epoch == doc.state_epoch:
+            pass
+        elif state is not None:
+            self.store.set_hot(doc, state)
+        else:
+            self.store.mark_void(doc)
 
     # ------------------------------------------------------------- scheduling
 
@@ -598,6 +728,12 @@ class BatchServer:
         docs = [t[0] for t in chunk]
         buckets = [t[2] for t in chunk]
         counts = [t[3] for t in chunk]
+        # transparent rehydration on touch: every chunk member must be hot
+        # for the stacked dispatch — warm/cold members re-upload their
+        # snapshots (bit-exact), protected from each other's admissions
+        keep = frozenset(d.doc_id for d in docs)
+        for d in docs:
+            self.store.ensure_hot(d, keep=keep)
         # pad to a pow2 batch (multiple of the mesh's batch axis) with copies
         # of doc 0 carrying empty edit buckets (all -1): no-op slices whose
         # output is discarded. Members are placed to balance dirty-slot work
@@ -637,7 +773,7 @@ class BatchServer:
             if overflow[b]:
                 self._fallback_full_forward(doc)
             else:
-                doc.state = unstack_state(new_state, b)
+                self.store.set_hot(doc, unstack_state(new_state, b))
         return applied
 
     # ------------------------------------------------------------ slow paths
@@ -645,9 +781,17 @@ class BatchServer:
     def _reingest(self, doc: _BatchDoc) -> None:
         """Rebuild device state from the host mirrors (one full forward)."""
         eng = self.engine(self.C, self.R)
-        doc.state = eng.full_forward(_device_copy(doc.tokens),
-                                     _device_copy(doc.positions),
-                                     _device_copy(doc.valid))
+        # admit the replacement state up front (a grown buffer is bigger
+        # than the one it replaces; an evicted doc brings wholly new bytes)
+        new_bytes = state_nbytes_for(doc.n_cap, eng.L, eng.meta)
+        resident = (self.store.nbytes(doc.doc_id)
+                    if self.store.tier(doc.doc_id) == "hot" else 0)
+        self.store.admit(max(new_bytes - resident, 0),
+                         keep=frozenset((doc.doc_id,)))
+        state = eng.full_forward(_device_copy(doc.tokens),
+                                 _device_copy(doc.positions),
+                                 _device_copy(doc.valid))
+        self.store.set_hot(doc, state)
         # the state is a from-scratch full forward again: every exported
         # column is trustworthy for suggestion KV reuse
         doc.touched_from = None
@@ -746,6 +890,7 @@ class BatchServer:
     def _refresh_doc(self, doc: _BatchDoc) -> None:
         sugg = self.suggester
         eng = self.engine(self.C, self.R)
+        self.store.ensure_hot(doc)  # KV export reads the device state
         try:
             toks = sugg.refresh(
                 eng, doc.state, key=doc.doc_id, n_new=doc.suggest_n,
@@ -778,9 +923,11 @@ class BatchServer:
         return self._flushed(doc_id).seq_tokens().copy()
 
     def state(self, doc_id: str) -> JitState:
-        return self._flushed(doc_id).state
+        doc = self._flushed(doc_id)
+        return self.store.ensure_hot(doc)
 
     def logits(self, doc_id: str) -> np.ndarray:
         doc = self._flushed(doc_id)
         eng = self.engine(self.C, self.R)
-        return np.asarray(eng.logits_at(doc.state, jnp.int32(doc.slots[-1])))
+        state = self.store.ensure_hot(doc)
+        return np.asarray(eng.logits_at(state, jnp.int32(doc.slots[-1])))

@@ -115,6 +115,71 @@ class KVExport(NamedTuple):
     n_real: jax.Array  # [] int32 — rows 0..n_real-1 are real
 
 
+def state_to_host(state: JitState) -> JitState:
+    """Snapshot a device-resident ``JitState`` into host-owned numpy arrays.
+
+    The copy is eager (``np.array(..., copy=True)``) so the returned leaves
+    share no storage with device buffers — evicting the device state frees
+    its memory immediately instead of keeping it alive through a zero-copy
+    view (the CPU backend hands out views from ``device_get``). The host
+    snapshot is the warm tier of ``repro.serving.state_store`` and the
+    payload of its cold (disk) tier; ``state_from_host`` re-uploads it
+    bit-exactly."""
+    import numpy as np
+
+    return JitState(*(np.array(jax.device_get(leaf), copy=True)
+                      for leaf in state))
+
+
+def state_from_host(host_state: JitState) -> JitState:
+    """Re-upload a ``state_to_host`` snapshot. Bit-exact: every leaf is a
+    plain dtype round-trip (no recompute), so a rehydrated document is
+    indistinguishable from one that was never evicted. The host arrays are
+    store-owned and never mutated after the snapshot, so the asynchronous
+    device read (see ``batch_server._device_copy``) cannot race anything."""
+    return JitState(*(jnp.asarray(leaf) for leaf in host_state))
+
+
+def state_nbytes(state: JitState) -> int:
+    """Exact byte footprint of one document's state (any tier: the device
+    layout, the host snapshot and the npz payload all share dtypes)."""
+    return sum(leaf.size * leaf.dtype.itemsize for leaf in jax.tree.leaves(state))
+
+
+def state_nbytes_for(n_cap: int, n_layers: int, meta: dict) -> int:
+    """``state_nbytes`` from shapes alone — what a capacity-``n_cap``
+    document WILL occupy, before its state exists (the store admits new
+    documents and ``n_cap``-doubling re-ingests against this). ``meta`` is
+    the engine's weight metadata (``JitIncrementalEngine.meta``). Must match
+    ``state_nbytes`` of a real state leaf-for-leaf
+    (tests/test_state_store.py::test_state_nbytes_formula_matches)."""
+    L, d, H, dh, Q, hq = (n_layers, meta["d"], meta["H"], meta["dh"],
+                          meta["Q"], meta["hq"])
+    f32 = 4
+    return (
+        n_cap * 4            # tokens int32
+        + n_cap * 4          # positions int32
+        + n_cap * 1          # valid bool
+        + 4                  # n_real int32
+        + (L + 1) * n_cap * d * f32          # x
+        + 3 * L * n_cap * H * dh * f32       # q, k, v
+        + 2 * L * n_cap * H * Q * f32        # vc, T
+        + L * n_cap * hq * 4                 # codes int32
+    )
+
+
+def state_nbytes_for_config(cfg: ArchConfig, n_cap: int) -> int:
+    """``state_nbytes_for`` straight from an ``ArchConfig`` — for sizing a
+    device budget BEFORE any engine (and its weight flattening) exists,
+    e.g. ``BatchServer(device_budget_bytes=k * state_nbytes_for_config(...))``.
+    Uses the same field mapping as ``core.incremental.IncrementalEngine``."""
+    if cfg.vqt is None:
+        raise ValueError("state sizing requires a VQT config")
+    meta = dict(d=cfg.d_model, H=cfg.n_heads, dh=cfg.resolved_head_dim,
+                Q=cfg.vqt.codebook_size, hq=cfg.vqt.n_heads)
+    return state_nbytes_for(n_cap, cfg.n_layers, meta)
+
+
 def _weights_from_params(params: dict, cfg: ArchConfig):
     """Flatten stage params into per-layer stacked arrays (the engine's
     LayerWeights, vectorized over L)."""

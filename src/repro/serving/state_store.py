@@ -1,0 +1,406 @@
+"""Tiered document-state store: device state as a managed, budgeted resource
+(DESIGN.md §7 "State as a tiered resource").
+
+The paper's value proposition is that a document's incremental state (VQ
+codes, cached k/v, layer sums) is durable across edits — but durable state
+that can only live on the device caps the fleet at whatever fits in device
+memory, forever. This module makes residency a first-class scheduling
+concern. Every open document's ``JitState`` lives in exactly one tier:
+
+* **hot** — device-resident, exactly the pre-store behavior. The only tier
+  a dispatch / KV export / logits read can serve from.
+* **warm** — a host-RAM numpy snapshot (``jit_engine.state_to_host``; the
+  eager-copy discipline of ``batch_server._device_copy`` — store-owned
+  buffers are never mutated, so the re-upload's asynchronous device read
+  cannot race anything).
+* **cold** — an npz on disk (``checkpoint.save_document_state``: the full
+  ``JitState`` plus the allocator's position-id snapshot and the suggestion
+  watermarks, all captured at eviction time so the file is internally
+  consistent), so a fleet can exceed host RAM too — and a process restart
+  can readopt its flushed sessions.
+
+Rehydration is a pure re-upload — **bit-exact, never a recompute**: the
+device state is a pure function of the snapshot, so a document that was
+evicted and touched again is indistinguishable from one that never left
+(tests/test_state_store.py's differential churn harness). Contrast the
+naive fallback — drop the state and ``full_forward`` on next touch — which
+costs a full pass and perturbs low-order float bits.
+
+Budget policy (``admit``): a configurable device budget in bytes covers
+resident document states (``bytes_hot``) plus suggestion decode caches
+(``bytes_suggest``). When an admission would exceed it, the store reclaims
+in LRU order, cheapest casualty first:
+
+1. drop suggestion decode caches of non-protected documents — *soft state*:
+   a dropped cache re-prefills from the KV export on the next refresh
+   (token-identical suggestions, DESIGN.md §5), so it is always evictable —
+   even for pinned documents;
+2. demote unpinned, non-protected hot documents to warm (the LRU-with-
+   pinning core);
+3. drop the protected documents' own suggestion caches;
+4. raise ``DeviceBudgetError`` — only pins and the active dispatch's keep
+   set can force this, so the message says which.
+
+A host budget bounds the warm tier the same way: overflowing warm snapshots
+spill to disk (LRU again). Dispatch-transient copies (the stacked batch
+pytree) are intentionally outside the budget — they exist for one step and
+scale with ``max_batch``, not with the fleet.
+
+The store mutates the server's ``BatchStats`` counters directly
+(``bytes_hot/warm/cold/suggest``, per-tier doc counts, ``evictions`` /
+``spills`` / ``rehydrations`` / ``hot_hits`` / ``state_touches``) — they
+reconcile exactly against a recount of the underlying objects
+(tests/test_state_store.py::test_stats_reconcile).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from repro.checkpoint.store import restore_document_state, save_document_state
+from repro.serving.jit_engine import (
+    JitState, state_from_host, state_nbytes, state_to_host,
+)
+
+TIER_HOT = "hot"
+TIER_WARM = "warm"
+TIER_COLD = "cold"
+# Not a storage tier: NO copy exists anywhere and the document must be
+# rebuilt from its host mirrors (a full forward) on next touch. Only the
+# dispatch-failure rollback corner produces this — a doc that entered a
+# take evicted and whose warm/cold copy a mid-take re-ingest consumed —
+# so rollback itself never computes (and never raises); the rebuild runs
+# at ordinary touch time through the server's re-ingest callback.
+TIER_VOID = "void"
+
+
+class DeviceBudgetError(RuntimeError):
+    """The device budget cannot admit the requested bytes: everything
+    evictable has been evicted and what remains is pinned or belongs to the
+    dispatch being served. Raise the budget, unpin documents, or lower
+    ``max_batch`` (a dispatch needs its whole chunk hot at once)."""
+
+
+@dataclass
+class _Entry:
+    doc_id: str
+    nbytes: int  # state footprint (identical across tiers)
+    tier: str = TIER_HOT
+    lru: int = 0  # last-touch tick (monotonic store clock)
+    pinned: bool = False
+    suggest_bytes: int = 0  # device-resident decode cache (soft state)
+    warm: Optional[JitState] = None  # host snapshot (warm tier payload)
+    # (allocator ids, invalid_from, touched_from) captured at EVICTION time,
+    # i.e. the same instant as the state snapshot — a later spill writes
+    # these, not the live doc's (whose host mirrors may already be mid-take),
+    # so the npz is internally consistent with its state payload
+    warm_meta: Optional[tuple] = None
+    cold_path: Optional[str] = None  # npz path (cold tier payload)
+    cold_ids: Optional[np.ndarray] = None  # allocator ids recorded at spill
+
+
+class StateStore:
+    """Residency manager for ``BatchServer`` documents.
+
+    ``docs`` is the server's live ``doc_id -> _BatchDoc`` dict (the store
+    reads/writes ``doc.state`` through it); ``stats`` the server's
+    ``BatchStats`` (authoritative byte/doc/eviction counters);
+    ``drop_suggest`` a callback that drops one document's suggestion decode
+    cache (the suggester's listener reports the freed bytes back through
+    ``note_suggest_bytes``).
+    """
+
+    def __init__(self, *, docs: dict, stats, drop_suggest, reingest=None,
+                 device_budget_bytes: Optional[int] = None,
+                 host_budget_bytes: Optional[int] = None,
+                 spill_dir: Optional[str] = None):
+        if device_budget_bytes is not None and device_budget_bytes <= 0:
+            raise ValueError("device_budget_bytes must be positive (or None)")
+        if host_budget_bytes is not None and host_budget_bytes <= 0:
+            raise ValueError("host_budget_bytes must be positive (or None)")
+        self.device_budget_bytes = device_budget_bytes
+        self.host_budget_bytes = host_budget_bytes
+        self._spill_dir = spill_dir
+        self._docs = docs
+        self._stats = stats
+        self._drop_suggest = drop_suggest
+        self._reingest = reingest  # rebuild-from-mirrors (TIER_VOID recovery)
+        self._entries: dict[str, _Entry] = {}
+        self._clock = 0
+        self._uid = 0
+
+    # ------------------------------------------------------------- queries
+
+    def __contains__(self, doc_id: str) -> bool:
+        return doc_id in self._entries
+
+    def tier(self, doc_id: str) -> str:
+        return self._entries[doc_id].tier
+
+    def tiers(self) -> dict[str, str]:
+        """doc_id -> tier, for every managed document (test introspection)."""
+        return {d: e.tier for d, e in self._entries.items()}
+
+    def nbytes(self, doc_id: str) -> int:
+        return self._entries[doc_id].nbytes
+
+    def pinned(self, doc_id: str) -> bool:
+        return self._entries[doc_id].pinned
+
+    # ------------------------------------------------------------- plumbing
+
+    def _tick(self, e: _Entry) -> None:
+        self._clock += 1
+        e.lru = self._clock
+
+    def _budget_used(self) -> int:
+        return self._stats.bytes_hot + self._stats.bytes_suggest
+
+    def _spill_path(self) -> str:
+        if self._spill_dir is None:
+            self._spill_dir = tempfile.mkdtemp(prefix="repro-state-store-")
+        os.makedirs(self._spill_dir, exist_ok=True)
+        self._uid += 1
+        return os.path.join(self._spill_dir, f"doc{self._uid}.npz")
+
+    def _drop_holdings(self, e: _Entry) -> None:
+        """Forget whatever tier payload the entry holds (accounting too).
+        TIER_VOID holds nothing."""
+        if e.tier == TIER_HOT:
+            self._stats.bytes_hot -= e.nbytes
+            self._stats.docs_hot -= 1
+        elif e.tier == TIER_WARM:
+            self._stats.bytes_warm -= e.nbytes
+            self._stats.docs_warm -= 1
+            e.warm = None
+            e.warm_meta = None
+        elif e.tier == TIER_COLD:
+            self._stats.bytes_cold -= e.nbytes
+            self._stats.docs_cold -= 1
+            if e.cold_path and os.path.exists(e.cold_path):
+                os.remove(e.cold_path)
+            e.cold_path = None
+            e.cold_ids = None
+
+    # ------------------------------------------------------------- lifecycle
+
+    def register(self, doc) -> None:
+        """Adopt a freshly ingested document (its ``state`` is hot)."""
+        if doc.doc_id in self._entries:
+            raise KeyError(f"document {doc.doc_id!r} already in the store")
+        e = _Entry(doc_id=doc.doc_id, nbytes=state_nbytes(doc.state))
+        self._entries[doc.doc_id] = e
+        self._stats.bytes_hot += e.nbytes
+        self._stats.docs_hot += 1
+        self._tick(e)
+
+    def set_hot(self, doc, state: JitState) -> None:
+        """Adopt a REPLACED device state (dispatch result, re-ingest, grow).
+        Discards any warm/cold copy — they describe the superseded state —
+        and bumps the doc's ``state_epoch`` so the rollback path can tell a
+        content-changing replacement from a content-preserving rehydration."""
+        e = self._entries[doc.doc_id]
+        self._drop_holdings(e)
+        e.nbytes = state_nbytes(state)
+        e.tier = TIER_HOT
+        doc.state = state
+        doc.state_epoch += 1
+        self._stats.bytes_hot += e.nbytes
+        self._stats.docs_hot += 1
+        self._tick(e)
+
+    def close(self, doc) -> None:
+        """Release every holding of a closing document (any tier)."""
+        e = self._entries.pop(doc.doc_id)
+        self._drop_holdings(e)
+        self._stats.bytes_suggest -= e.suggest_bytes
+        doc.state = None
+
+    def pin(self, doc_id: str) -> None:
+        """Exempt the document from eviction (and make it hot now, so a
+        pinned doc is always dispatch-ready). Suggestion decode caches stay
+        evictable even when pinned — they are soft state."""
+        self.ensure_hot(self._docs[doc_id])
+        self._entries[doc_id].pinned = True
+
+    def unpin(self, doc_id: str) -> None:
+        self._entries[doc_id].pinned = False
+
+    # ------------------------------------------------------------- admission
+
+    def admit(self, nbytes: int, keep: frozenset = frozenset()) -> None:
+        """Make room for ``nbytes`` of incoming device state. ``keep`` names
+        documents that must stay hot (the dispatch chunk being assembled)."""
+        if self.device_budget_bytes is None:
+            return
+
+        def over() -> bool:
+            return self._budget_used() + nbytes > self.device_budget_bytes
+
+        if not over():
+            return
+        by_lru = sorted(self._entries.values(), key=lambda e: e.lru)
+        # 1. soft state first: non-protected suggestion decode caches
+        for e in by_lru:
+            if not over():
+                return
+            if e.suggest_bytes and e.doc_id not in keep:
+                self._drop_suggest(e.doc_id)
+        # 2. LRU-with-pinning: demote hot documents to warm
+        for e in by_lru:
+            if not over():
+                return
+            if e.tier == TIER_HOT and not e.pinned and e.doc_id not in keep:
+                self._evict_hot(e)
+        # 3. last resort: the protected documents' own decode caches
+        for e in by_lru:
+            if not over():
+                return
+            if e.suggest_bytes:
+                self._drop_suggest(e.doc_id)
+        if over():
+            pinned = sum(e.nbytes for e in self._entries.values() if e.pinned)
+            kept = sum(e.nbytes for e in self._entries.values()
+                       if e.doc_id in keep and e.tier == TIER_HOT)
+            raise DeviceBudgetError(
+                f"cannot admit {nbytes} bytes under a device budget of "
+                f"{self.device_budget_bytes}: {self._stats.bytes_hot} hot "
+                f"({pinned} pinned, {kept} held by the active dispatch) + "
+                f"{self._stats.bytes_suggest} suggestion-cache bytes remain")
+
+    def note_suggest_bytes(self, doc_id: str, nbytes: int) -> None:
+        """Suggestion decode-cache accounting (the suggester's listener).
+        Growth may push the budget over — reclaim immediately, protecting
+        the document whose refresh just produced the cache."""
+        e = self._entries.get(doc_id)
+        if e is None:
+            return  # unmanaged key (oracle harnesses)
+        delta = int(nbytes) - e.suggest_bytes
+        e.suggest_bytes = int(nbytes)
+        self._stats.bytes_suggest += delta
+        if delta > 0:
+            self.admit(0, keep=frozenset((doc_id,)))
+
+    # ------------------------------------------------------------- movement
+
+    def ensure_hot(self, doc, keep: frozenset = frozenset()) -> JitState:
+        """The transparent-rehydration entry point: every device-state read
+        (dispatch stacking, KV export, logits, re-ingest bases) goes through
+        here — it is also the LRU clock. Hot documents just touch the
+        clock; warm/cold documents re-upload their snapshot — bit-exact, no
+        recompute; a void document (rollback corner) rebuilds from its host
+        mirrors through the server's re-ingest callback."""
+        e = self._entries[doc.doc_id]
+        self._tick(e)
+        self._stats.state_touches += 1
+        if e.tier == TIER_HOT:
+            self._stats.hot_hits += 1
+            return doc.state
+        if e.tier == TIER_VOID:
+            self._reingest(doc)  # admits, recomputes, adopts via set_hot
+            self._stats.rollback_rebuilds += 1
+            return doc.state
+        self.admit(e.nbytes, keep=keep | frozenset((doc.doc_id,)))
+        if e.tier == TIER_COLD:
+            host_state, ids, _meta = restore_document_state(e.cold_path)
+            if e.cold_ids is not None and not np.array_equal(
+                    np.asarray(ids), e.cold_ids):
+                raise RuntimeError(
+                    f"cold-tier corruption for {doc.doc_id!r}: allocator ids "
+                    "in the spill file do not match the ids recorded at "
+                    "spill time")
+        else:
+            host_state = e.warm
+        self._drop_holdings(e)  # releases the snapshot / spill file + bytes
+        # content-preserving re-upload: doc.state_epoch does NOT bump
+        doc.state = state_from_host(host_state)
+        e.tier = TIER_HOT
+        self._stats.bytes_hot += e.nbytes
+        self._stats.docs_hot += 1
+        self._stats.rehydrations += 1
+        return doc.state
+
+    def mark_void(self, doc) -> None:
+        """Rollback corner: the document's pre-take copy no longer exists in
+        any tier (a mid-take re-ingest consumed it) and the host mirrors are
+        the only source of truth. Never computes — the rebuild happens at
+        the next touch (``ensure_hot``), where admission and a full forward
+        can fail at ordinary, recoverable times."""
+        e = self._entries[doc.doc_id]
+        self._drop_holdings(e)
+        e.tier = TIER_VOID
+        doc.state = None
+
+    def demote(self, doc, tier: str) -> str:
+        """Force-evict a document to ``tier`` (tests, benchmarks, and the
+        admission passes). No-op if the document is already at or below the
+        target tier. Returns the resulting tier."""
+        if tier not in (TIER_WARM, TIER_COLD):
+            raise ValueError(f"cannot demote to tier {tier!r}")
+        e = self._entries[doc.doc_id]
+        if e.pinned:
+            raise ValueError(f"document {doc.doc_id!r} is pinned")
+        if e.tier == TIER_HOT:
+            self._evict_hot(e)
+        if tier == TIER_COLD and e.tier == TIER_WARM:
+            self._spill_warm(e)
+        return e.tier
+
+    # ------------------------------------------------------------- internals
+
+    def _evict_hot(self, e: _Entry) -> None:
+        doc = self._docs[e.doc_id]
+        e.warm = state_to_host(doc.state)
+        e.warm_meta = (doc.allocator.snapshot(), doc.invalid_from,
+                       doc.touched_from)
+        doc.state = None
+        e.tier = TIER_WARM
+        self._stats.bytes_hot -= e.nbytes
+        self._stats.docs_hot -= 1
+        self._stats.bytes_warm += e.nbytes
+        self._stats.docs_warm += 1
+        self._stats.evictions += 1
+        if e.suggest_bytes:
+            # the decode cache references this state's export lineage; it is
+            # device memory with no document on device — always drop it
+            self._drop_suggest(e.doc_id)
+        self._spill_over_host_budget()
+
+    def _spill_over_host_budget(self) -> None:
+        if self.host_budget_bytes is None:
+            return
+        warm = sorted((e for e in self._entries.values()
+                       if e.tier == TIER_WARM), key=lambda e: e.lru)
+        for e in warm:
+            if self._stats.bytes_warm <= self.host_budget_bytes:
+                return
+            self._spill_warm(e)
+
+    def _spill_warm(self, e: _Entry) -> None:
+        path = self._spill_path()
+        # companions captured at eviction time, NOT read from the live doc:
+        # between eviction and spill a take may have mutated the host-side
+        # allocator/watermarks past the snapshotted state. (Durable
+        # cross-process readoption additionally wants a flushed document —
+        # eviction of a doc with a pending take records post-take mirrors
+        # against its pre-take state; in-process rehydration never reads
+        # the file's companions, only integrity-checks them.)
+        ids, invalid_from, touched_from = e.warm_meta
+        save_document_state(path, e.warm, allocator_ids=ids,
+                            invalid_from=invalid_from,
+                            touched_from=touched_from,
+                            extra={"doc_id": e.doc_id})
+        e.cold_path = path
+        e.cold_ids = np.asarray(ids, np.int32).copy()
+        e.warm = None
+        e.warm_meta = None
+        e.tier = TIER_COLD
+        self._stats.bytes_warm -= e.nbytes
+        self._stats.docs_warm -= 1
+        self._stats.bytes_cold += e.nbytes
+        self._stats.docs_cold += 1
+        self._stats.spills += 1

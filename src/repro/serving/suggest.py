@@ -93,7 +93,7 @@ class SuggestionEngine:
     """
 
     def __init__(self, params: dict, cfg: ArchConfig, *, default_new: int = 8,
-                 dtype=jnp.float32):
+                 dtype=jnp.float32, on_cache_bytes=None):
         if cfg.pos not in ("learned", "sampled"):
             raise ValueError("suggestion serving expects absolute position ids")
         self.params = params
@@ -104,14 +104,40 @@ class SuggestionEngine:
         self._prefill = jax.jit(
             lambda p, c, t, pos: T.prefill_step(p, cfg, t, c, pos))
         self._cache: dict = {}
+        # residency listener (the state store's budget accounting): called
+        # with (key, nbytes) whenever a document's persisted decode cache is
+        # stored or dropped — decode caches are device memory and count
+        # toward the serving budget as SOFT state (re-prefillable)
+        self._on_cache_bytes = on_cache_bytes
         self.stats = SuggestStats()
 
     # ------------------------------------------------------------- cache mgmt
 
+    def cache_nbytes(self, key) -> int:
+        """Device bytes held by a document's persisted decode cache (0 when
+        none) — length counters included; the budget does not care which
+        rows are live."""
+        entry = self._cache.get(key)
+        if entry is None:
+            return 0
+        return sum(leaf.size * leaf.dtype.itemsize
+                   for leaf in jax.tree.leaves(entry.caches))
+
+    def cached_keys(self) -> list:
+        """Keys with a persisted decode cache (leak tests / reconciliation)."""
+        return list(self._cache)
+
+    def _notify(self, key, nbytes: int) -> None:
+        if self._on_cache_bytes is not None:
+            self._on_cache_bytes(key, nbytes)
+
     def drop(self, key) -> None:
         """Forget a document's persisted decode cache (defrag re-spreads
-        every position id, so nothing in it is reusable)."""
-        self._cache.pop(key, None)
+        every position id, so nothing in it is reusable; the state store
+        also drops caches under budget pressure — soft state, the next
+        refresh rebuilds from the KV export)."""
+        if self._cache.pop(key, None) is not None:
+            self._notify(key, 0)
 
     def pos_headroom(self, last_pos: int) -> int:
         """How many continuation ids fit after ``last_pos``."""
@@ -217,6 +243,7 @@ class SuggestionEngine:
                 caches=caches, tokens=seq_tokens[:n].copy(),
                 positions=seq_positions[:n].copy(), n=n, n_cap=n_cap,
                 n_new_cap=n_new_cap)
+            self._notify(key, self.cache_nbytes(key))
         self.stats.refreshes += 1
         self.stats.prefill_rows_reused += p_eff
         self.stats.prefill_rows_recomputed += n - p_eff

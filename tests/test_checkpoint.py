@@ -1,10 +1,15 @@
-"""Checkpoint save/restore."""
+"""Checkpoint save/restore: pytree/train-state paths AND the serving
+document-state path (the state store's cold tier, ISSUE 5) — a full
+``JitState`` with its position-id mirrors, valid mask, allocator snapshot
+and suggestion watermarks must round-trip bit-exactly."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import restore_pytree, save_pytree
+from repro.checkpoint import (
+    restore_document_state, restore_pytree, save_document_state, save_pytree,
+)
 from repro.configs.vq_opt_125m import smoke_config
 from repro.training import train_state_init
 
@@ -31,3 +36,68 @@ def test_restore_missing_key_raises(tmp_path):
     save_pytree(p, {"w": jnp.zeros((2,))})
     with pytest.raises(KeyError):
         restore_pytree(p, {"w": jnp.zeros((2,)), "b": jnp.zeros((1,))})
+
+
+# -------------------------------------------------- serving document state
+
+
+def _slot_buffer_state():
+    """A realistic slot-buffer JitState: gapped position ids, a free
+    (invalid) slot in the middle, post-edit content — the exact thing the
+    state store's cold tier must preserve."""
+    from repro.core.positional import PositionAllocator
+    from repro.models import transformer as T
+    from repro.serving.jit_engine import JitIncrementalEngine
+
+    cfg = smoke_config(vqt=True)
+    params = T.init_params(jax.random.PRNGKey(3), cfg)
+    eng = JitIncrementalEngine(params, cfg, edit_capacity=4, row_capacity=16)
+    n, n_cap = 6, 8
+    alloc = PositionAllocator(n, cfg.pos_pool or cfg.max_seq)
+    rng = np.random.default_rng(4)
+    tokens = np.zeros(n_cap, np.int32)
+    tokens[:n] = rng.integers(0, cfg.vocab, n)
+    valid = np.zeros(n_cap, bool)
+    valid[:n] = True
+    valid[3] = False  # a freed slot mid-buffer: garbage activations ride along
+    positions = np.full(n_cap, (cfg.pos_pool or cfg.max_seq) - 1, np.int32)
+    positions[:n] = alloc.snapshot()
+    state = eng.full_forward(jnp.asarray(tokens), jnp.asarray(positions),
+                             jnp.asarray(valid))
+    return state, alloc, eng
+
+
+def test_roundtrip_document_state(tmp_path):
+    state, alloc, eng = _slot_buffer_state()
+    p = str(tmp_path / "doc.npz")
+    save_document_state(p, state, allocator_ids=alloc.snapshot(),
+                        invalid_from=17, touched_from=None,
+                        extra={"doc_id": "d0"})
+    restored, ids, meta = restore_document_state(p)
+    # every field bit-exact — including the position-id mirror, the valid
+    # mask (with its mid-buffer hole) and n_real
+    for name, a, b in zip(type(state)._fields, state, restored):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=name)
+        assert np.asarray(a).dtype == np.asarray(b).dtype, name
+    np.testing.assert_array_equal(ids, alloc.snapshot())
+    assert meta["invalid_from"] == 17
+    assert meta["touched_from"] is None
+    assert meta["doc_id"] == "d0"
+    # the restored state serves logits identical to the original
+    np.testing.assert_array_equal(
+        np.asarray(eng.logits_at(state, jnp.int32(5))),
+        np.asarray(eng.logits_at(
+            jax.tree.map(jnp.asarray, restored), jnp.int32(5))))
+
+
+def test_document_state_rejects_non_state(tmp_path):
+    with pytest.raises(TypeError):
+        save_document_state(str(tmp_path / "x.npz"), {"not": "a state"},
+                            allocator_ids=np.arange(3))
+
+
+def test_document_state_missing_fields_raises(tmp_path):
+    p = str(tmp_path / "y.npz")
+    np.savez(p, **{"state/tokens": np.zeros(4, np.int32)})
+    with pytest.raises(KeyError):
+        restore_document_state(p)
