@@ -119,6 +119,15 @@ def main():
                            n_edits=64 if args.full else 32)
     summary.append({"benchmark": "state_churn", "rows": recs})
 
+    print(f"\n=== Async concurrent load: deadline batching + latency SLOs "
+          f"({time.time()-t0:.0f}s) ===")
+    from benchmarks import async_load
+
+    recs = async_load.run(n_docs=4 if args.full else 3,
+                          doc_len=48 if args.full else 24,
+                          n_edits=12 if args.full else 6)
+    summary.append({"benchmark": "async_load", "rows": recs})
+
     if not args.skip_accuracy:
         print(f"\n=== Table 1: accuracy parity ({time.time()-t0:.0f}s) ===")
         from benchmarks import table1_accuracy

@@ -1,5 +1,6 @@
 """Suggestion-reuse benchmark: continuation decoding over an edit stream,
-with vs without edited-prefix reuse (ISSUE 3 tentpole).
+with vs without edited-prefix reuse (ISSUE 3 tentpole; timing protocol
+fixed in ISSUE 6).
 
 The writing-assistant loop: a document takes single-token edits; after each
 edit the server refreshes a greedy ``n_new``-token suggestion. The
@@ -7,6 +8,23 @@ edit the server refreshes a greedy ``n_new``-token suggestion. The
 invalidated position and re-prefills only the suffix (power-of-two chunk
 buckets); the baseline is the from-scratch oracle, which re-prefills the
 whole document per refresh.
+
+Timing protocol (the two hazards this benchmark used to get wrong):
+
+* **Async dispatch.** jax dispatches asynchronously: without a device sync
+  at every timed-segment boundary, pending work from one leg is silently
+  billed to whichever leg's timer happens to be running when the device
+  gets to it. Every segment here starts and ends on
+  ``jax.block_until_ready(jax.live_arrays())`` — the same discipline as
+  ``benchmarks.common.timeit``.
+* **Compile amortization.** Each distinct re-prefill chunk shape traces +
+  compiles once (~seconds on CPU, vs ~tens of ms steady-state); the oracle
+  compiles ONE shape while the incremental path compiles O(log n_cap), so
+  unwarmed per-edit timings compare compile counts, not serving cost. A
+  warmup pass replays the identical seeded stream on a scratch document
+  first, so the timed pass measures steady state — the regime the
+  persistent compilation cache (``repro.common.compile_cache``) puts a
+  restarted server in from its first edit.
 
 Workloads (all single-token edits):
 
@@ -19,8 +37,11 @@ Workloads (all single-token edits):
 
 Emits ``results/BENCH_suggest_reuse.json`` — one record per workload with
 ``reused_prefill_fraction`` (reused rows / total rows across refreshes),
-oracle-match booleans, and wall-clock per edit+refresh — plus name,value CSV
-lines like the other benchmarks.
+oracle-match booleans, wall-clock per edit+refresh, and
+``refresh_to_oracle_ratio`` (median incremental edit+refresh over median
+from-scratch oracle; < 1 means the paper's headline win survives in
+wall-clock, gated in CI) — plus name,value CSV lines like the other
+benchmarks.
 """
 from __future__ import annotations
 
@@ -46,16 +67,28 @@ def _edit_pos(rng, kind: str, n: int, cursor: int, workload: str) -> int:
     return int(rng.integers(n + (1 if kind == "insert" else 0)))
 
 
-def run(doc_len: int = 96, n_edits: int = 24, n_new: int = 8,
-        seed: int = 0, check_oracle: bool = True) -> list[dict]:
+def _sync() -> None:
+    """Device-sync barrier for timed-segment boundaries: blocks on every
+    live array, so no pending dispatch from the previous segment can be
+    billed to the next one (jax async dispatch, DESIGN.md §8)."""
     import jax
 
+    jax.block_until_ready(jax.live_arrays())
+
+
+def run(doc_len: int = 96, n_edits: int = 24, n_new: int = 8,
+        seed: int = 0, check_oracle: bool = True,
+        warmup: bool = True) -> list[dict]:
+    import jax
+
+    from repro.common.compile_cache import enable_persistent_compilation_cache
     from repro.configs.vq_opt_125m import smoke_config
     from repro.models import transformer as T
     from repro.serving.batch_server import BatchServer
     from repro.serving.jit_engine import JitIncrementalEngine
     from repro.serving.suggest import SuggestionEngine, oracle_suggestion
 
+    enable_persistent_compilation_cache()  # no-op unless the env var is set
     cfg = smoke_config(vqt=True)
     params = jax.device_get(T.init_params(jax.random.PRNGKey(seed), cfg))
     srv = BatchServer(params, cfg, edit_capacity=4, row_capacity=32,
@@ -66,70 +99,100 @@ def run(doc_len: int = 96, n_edits: int = 24, n_new: int = 8,
 
     records = []
     for workload in ("typing", "editing", "uniform"):
-        rng = np.random.default_rng(seed)
-        doc_id = f"w_{workload}"
-        ref = list(rng.integers(0, cfg.vocab, doc_len))
-        srv.open_document(doc_id, ref)
-        srv.suggest(doc_id, n_new)  # initial refresh (cache build)
-        before = srv.suggest_stats
-        rows0 = (before.prefill_rows_reused, before.prefill_rows_recomputed)
-        cursor = doc_len - 1
-        matches = []
-        t_refresh = t_oracle = 0.0
-        for _ in range(n_edits):
-            kind = str(rng.choice(["replace", "insert", "delete"],
-                                  p=[0.7, 0.2, 0.1]))
-            n = len(ref)
-            if kind == "delete" and n <= 2:
-                kind = "replace"
-            pos = _edit_pos(rng, kind, n, cursor, workload)
-            cursor = pos
-            tok = int(rng.integers(cfg.vocab))
-            if kind == "replace":
-                srv.submit_replace(doc_id, pos, tok)
-                ref[pos] = tok
-            elif kind == "insert":
-                srv.submit_insert(doc_id, pos, tok)
-                ref.insert(pos, tok)
-            else:
-                srv.submit_delete(doc_id, pos)
-                del ref[pos]
-            t0 = time.perf_counter()
-            sugg = srv.suggest(doc_id, n_new)
-            t_refresh += time.perf_counter() - t0
-            if check_oracle:
-                doc = srv.docs[doc_id]
+        # warmup pass: replay the identical seeded stream on a scratch
+        # document so both legs' shapes are compiled before the timed pass
+        phases = (("warm", False),) if warmup else ()
+        phases += (("timed", True),)
+        for phase, timed in phases:
+            rng = np.random.default_rng(seed)
+            doc_id = f"w_{workload}_{phase}"
+            ref = list(rng.integers(0, cfg.vocab, doc_len))
+            srv.open_document(doc_id, ref)
+            srv.suggest(doc_id, n_new)  # initial refresh (cache build)
+            if timed:
+                before = srv.suggest_stats
+                rows0 = (before.prefill_rows_reused,
+                         before.prefill_rows_recomputed)
+            cursor = doc_len - 1
+            matches = []
+            refresh_ms: list[float] = []
+            oracle_ms: list[float] = []
+            for _ in range(n_edits):
+                kind = str(rng.choice(["replace", "insert", "delete"],
+                                      p=[0.7, 0.2, 0.1]))
+                n = len(ref)
+                if kind == "delete" and n <= 2:
+                    kind = "replace"
+                pos = _edit_pos(rng, kind, n, cursor, workload)
+                cursor = pos
+                tok = int(rng.integers(cfg.vocab))
+                if kind == "replace":
+                    srv.submit_replace(doc_id, pos, tok)
+                    ref[pos] = tok
+                elif kind == "insert":
+                    srv.submit_insert(doc_id, pos, tok)
+                    ref.insert(pos, tok)
+                else:
+                    srv.submit_delete(doc_id, pos)
+                    del ref[pos]
+                _sync()
                 t0 = time.perf_counter()
-                ora = oracle_suggestion(params, cfg, oracle_eng, doc.tokens,
-                                        doc.positions, doc.valid, n_new,
-                                        suggester=oracle_sugg)
-                t_oracle += time.perf_counter() - t0
-                matches.append(bool(np.array_equal(sugg, ora)))
-        after = srv.suggest_stats
-        reused = after.prefill_rows_reused - rows0[0]
-        recomputed = after.prefill_rows_recomputed - rows0[1]
-        total = reused + recomputed
-        rec = {
-            "workload": workload,
-            "doc_len": doc_len,
-            "n_edits": n_edits,
-            "n_new": n_new,
-            "prefill_rows_reused": int(reused),
-            "prefill_rows_recomputed": int(recomputed),
-            "reused_prefill_fraction": reused / max(total, 1),
-            "full_recompute_rows": int(len(ref) * n_edits),
-            "suggestions_match_oracle": (all(matches) if matches else None),
-            # includes the edit dispatch itself (suggest() flushes first);
-            # the oracle column is the bare from-scratch decode
-            "edit_and_refresh_ms_mean": 1e3 * t_refresh / n_edits,
-            "oracle_ms_mean": (1e3 * t_oracle / n_edits if check_oracle
-                               else None),
-        }
-        records.append(rec)
-        print(f"suggest_reuse,{workload},reused_fraction,"
-              f"{rec['reused_prefill_fraction']:.3f}")
-        print(f"suggest_reuse,{workload},refresh_ms,"
-              f"{rec['edit_and_refresh_ms_mean']:.2f}")
+                sugg = srv.suggest(doc_id, n_new)
+                _sync()
+                refresh_ms.append(1e3 * (time.perf_counter() - t0))
+                if check_oracle:
+                    doc = srv.docs[doc_id]
+                    t0 = time.perf_counter()
+                    ora = oracle_suggestion(params, cfg, oracle_eng,
+                                            doc.tokens, doc.positions,
+                                            doc.valid, n_new,
+                                            suggester=oracle_sugg)
+                    _sync()
+                    oracle_ms.append(1e3 * (time.perf_counter() - t0))
+                    if timed:
+                        matches.append(bool(np.array_equal(sugg, ora)))
+            if not timed:
+                srv.close_document(doc_id)  # scratch session: release state
+                continue
+            after = srv.suggest_stats
+            reused = after.prefill_rows_reused - rows0[0]
+            recomputed = after.prefill_rows_recomputed - rows0[1]
+            total = reused + recomputed
+            med_refresh = float(np.median(refresh_ms))
+            med_oracle = (float(np.median(oracle_ms)) if check_oracle
+                          else None)
+            rec = {
+                "workload": workload,
+                "doc_len": doc_len,
+                "n_edits": n_edits,
+                "n_new": n_new,
+                "prefill_rows_reused": int(reused),
+                "prefill_rows_recomputed": int(recomputed),
+                "reused_prefill_fraction": reused / max(total, 1),
+                "full_recompute_rows": int(len(ref) * n_edits),
+                "suggestions_match_oracle": (all(matches) if matches
+                                             else None),
+                # includes the edit dispatch itself (suggest() flushes
+                # first); the oracle column is the bare from-scratch decode.
+                # Segments are device-synced; shapes pre-compiled by warmup.
+                "edit_and_refresh_ms_mean": float(np.mean(refresh_ms)),
+                "oracle_ms_mean": (float(np.mean(oracle_ms)) if check_oracle
+                                   else None),
+                "edit_and_refresh_ms_median": med_refresh,
+                "oracle_ms_median": med_oracle,
+                # medians are runner-noise-robust; <1 = incremental refresh
+                # beats the from-scratch oracle in wall-clock (gated)
+                "refresh_to_oracle_ratio": (
+                    med_refresh / med_oracle if check_oracle else None),
+            }
+            records.append(rec)
+            print(f"suggest_reuse,{workload},reused_fraction,"
+                  f"{rec['reused_prefill_fraction']:.3f}")
+            print(f"suggest_reuse,{workload},refresh_ms,"
+                  f"{rec['edit_and_refresh_ms_mean']:.2f}")
+            if check_oracle:
+                print(f"suggest_reuse,{workload},refresh_to_oracle_ratio,"
+                      f"{rec['refresh_to_oracle_ratio']:.3f}")
 
     out = os.path.join(ensure_results(), "BENCH_suggest_reuse.json")
     with open(out, "w") as f:

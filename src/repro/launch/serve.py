@@ -8,6 +8,11 @@ Tiered-fleet demo (ISSUE 5: more sessions than the device budget admits;
 evicted documents rehydrate bit-exactly on their next touch):
   PYTHONPATH=src python -m repro.launch.serve --arch vq-opt-125m --smoke \
       --tiered --docs 8 --budget-docs 3 --doc-len 48 --edits 40
+
+Async-fleet demo (ISSUE 6: concurrent sessions through the deadline-batching
+front end; per-edit / per-suggestion latency SLOs printed at the end):
+  PYTHONPATH=src python -m repro.launch.serve --arch vq-opt-125m --smoke \
+      --async-fleet --docs 4 --doc-len 48 --edits 24 --delay-ms 8
 """
 from __future__ import annotations
 
@@ -100,6 +105,59 @@ def run_tiered(args, cfg, params) -> None:
           f"{s.bytes_hot}/{s.bytes_warm}/{s.bytes_cold}/{s.bytes_suggest}")
 
 
+def run_async_fleet(args, cfg, params) -> None:
+    """Concurrent sessions (one client thread each) through the deadline-
+    batching async front end (DESIGN.md §8): each client types a burst of
+    edits, then blocks on its refreshed suggestion; bursts admitted within
+    one ``--delay-ms`` window coalesce into shared dispatch rounds."""
+    import threading
+
+    from repro.serving.async_server import AsyncBatchServer
+    from repro.serving.batch_server import BatchServer
+
+    server = BatchServer(jax.device_get(params), cfg, edit_capacity=4,
+                         row_capacity=32, max_batch=max(2, args.docs),
+                         min_doc_capacity=64)
+    corpus = SyntheticCorpus(vocab=cfg.vocab, seed=0)
+    docs = {f"d{i}": list(corpus.document(args.doc_len, i))
+            for i in range(args.docs)}
+
+    def client(asrv, did, seed):
+        rng = np.random.default_rng(seed)
+        tokens = list(docs[did])
+        for burst in range(args.edits // 3):
+            for _ in range(3):
+                e = random_atomic_edit(rng, tokens, cfg.vocab)
+                asrv.submit_edit(did, e)
+                from repro.core.edits import apply_edit
+
+                tokens = apply_edit(tokens, e)
+            sugg = asrv.suggest(did, 8).result(600)
+            print(f"  {did} burst {burst}: suggestion "
+                  f"{[int(x) for x in sugg[:4]]}...")
+
+    with AsyncBatchServer(server,
+                          max_batch_delay_ms=args.delay_ms) as asrv:
+        for t in [asrv.open_document(d, toks) for d, toks in docs.items()]:
+            t.result(600)
+        print(f"opened {args.docs} concurrent sessions "
+              f"(deadline {args.delay_ms}ms, bucket {asrv.bucket_docs} docs)")
+        threads = [threading.Thread(target=client, args=(asrv, d, 10 + i))
+                   for i, d in enumerate(docs)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        a = asrv.stats
+        print(f"\nrounds={a.rounds} (deadline={a.deadline_rounds} "
+              f"full={a.full_rounds}) mean_edits_per_round="
+              f"{a.mean_edits_per_round:.2f} failed={a.requests_failed}")
+    s = server.stats
+    for name, h in (("edit", s.edit_latency), ("suggest", s.suggest_latency)):
+        print(f"{name:8s} latency: n={h.count} p50={h.p50:.1f}ms "
+              f"p99={h.p99:.1f}ms max={h.max_ms:.1f}ms")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="vq-opt-125m")
@@ -113,6 +171,12 @@ def main():
                     help="(--tiered) sessions to open")
     ap.add_argument("--budget-docs", type=int, default=3,
                     help="(--tiered) device budget, in resident documents")
+    ap.add_argument("--async-fleet", action="store_true",
+                    help="concurrent sessions via the deadline-batching "
+                         "async front end")
+    ap.add_argument("--delay-ms", type=float, default=8.0,
+                    help="(--async-fleet) max_batch_delay_ms dispatch "
+                         "deadline")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -124,6 +188,8 @@ def main():
         params = restore_pytree(args.ckpt, params)
     if args.tiered:
         run_tiered(args, cfg, params)
+    elif args.async_fleet:
+        run_async_fleet(args, cfg, params)
     else:
         run_single(args, cfg, params)
 

@@ -7,6 +7,10 @@ from repro.serving.batch_engine import (
     BatchedJitEngine, BatchedJitState, stack_states, unstack_state,
 )
 from repro.serving.batch_server import BatchServer, BatchStats, next_pow2
+from repro.serving.async_server import (
+    AsyncBatchServer, AsyncStats, SuggestionStream, Ticket,
+)
+from repro.serving.latency import LatencyStats
 from repro.serving.state_store import (
     DeviceBudgetError, StateStore, TIER_COLD, TIER_HOT, TIER_VOID, TIER_WARM,
 )

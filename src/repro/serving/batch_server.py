@@ -89,12 +89,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.common.bucketing import next_pow2
+from repro.common.compile_cache import enable_persistent_compilation_cache
 from repro.configs.base import ArchConfig
 from repro.core.edits import Edit
 from repro.core.positional import PositionAllocator
 from repro.serving.batch_engine import (
     BatchedJitEngine, stack_states, unstack_state,
 )
+from repro.serving.latency import LatencyStats
 from repro.serving.jit_engine import (
     JitState, OP_DELETE, OP_INSERT, OP_REPLACE, state_nbytes_for,
 )
@@ -140,6 +142,13 @@ class BatchStats:
     rejits: int = 0  # distinct dispatch shapes traced
     suggest_refreshes: int = 0  # suggestion recomputes served
     suggest_invalidations: int = 0  # fresh suggestions staled by newer edits
+    suggest_cached_hits: int = 0  # suggestions served from the cached
+    # continuation without touching the prefill/dispatch path (the
+    # watermarks were unchanged since the last refresh)
+    # ---- latency SLOs (DESIGN.md §8): per-request admission-to-completion
+    # histograms, recorded by the async front end (serving.async_server)
+    edit_latency: LatencyStats = field(default_factory=LatencyStats)
+    suggest_latency: LatencyStats = field(default_factory=LatencyStats)
     # ---- per-device dispatch balance (mesh>1 serving, DESIGN.md §6)
     sharded_dispatches: int = 0  # dispatches issued over a mesh of size > 1
     shard_imbalance_sum: float = 0.0  # sum over dispatches of (max-min)/max load
@@ -206,6 +215,8 @@ class _BatchDoc:
     suggestion: Optional[np.ndarray] = None  # last refreshed continuation
     suggest_n: int = 0  # standing request length (0 = no subscription)
     suggest_fresh: bool = False  # suggestion matches the current doc + queue
+    suggest_serial: int = 0  # bumped per real refresh (NOT per cached hit);
+    # the async front end uses it to detect which subscriptions advanced
     invalid_from: Optional[int] = None  # min pid edited since last refresh
     touched_from: Optional[int] = None  # min pid touched since last ingest
 
@@ -230,9 +241,15 @@ class BatchServer:
                  batch_axis: str = "data",
                  device_budget_bytes: Optional[int] = None,
                  host_budget_bytes: Optional[int] = None,
-                 spill_dir: Optional[str] = None):
+                 spill_dir: Optional[str] = None,
+                 compilation_cache_dir: Optional[str] = None):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
+        # persistent compilation cache (opt-in): per-(B, n_cap, C, R) bucket
+        # steps survive process restarts instead of re-tracing + re-compiling
+        # on every boot. None still honors $REPRO_COMPILE_CACHE_DIR.
+        self.compilation_cache_dir = enable_persistent_compilation_cache(
+            compilation_cache_dir)
         self.cfg = cfg
         self.C = next_pow2(edit_capacity)
         self.R = next_pow2(row_capacity)
@@ -265,6 +282,11 @@ class BatchServer:
         self.stats = BatchStats()
         self._sugg: Optional[SuggestionEngine] = None
         self._params = params
+        # streaming hook (serving.async_server): when set, every REAL
+        # suggestion refresh calls ``on_suggest_token(doc_id, serial, token)``
+        # per decoded token, as the decode loop produces it — cached-hit
+        # fast paths do not re-stream tokens the subscriber already has
+        self.on_suggest_token = None
         # tiered residency (DESIGN.md §7): budget=None still tracks bytes
         # and tiers — accounting is always on, eviction only under a budget
         self.store = StateStore(
@@ -868,10 +890,26 @@ class BatchServer:
 
     def suggest(self, doc_id: str, n_new: int = 8) -> np.ndarray:
         """Flush the document's pending edits and return a fresh greedy
-        continuation (subscribing the document if it was not already)."""
+        continuation (subscribing the document if it was not already).
+
+        Redundant-refresh fast path: when nothing changed since the last
+        refresh (no pending edits, ``invalid_from`` watermark clear) and the
+        cached continuation covers ``n_new``, the cached tokens are returned
+        WITHOUT re-entering the prefill/dispatch path — greedy decoding is
+        deterministic, so an unchanged document has an unchanged
+        continuation (regression-tested by
+        tests/test_async_server.py::test_back_to_back_suggest_no_redispatch).
+        """
+        if n_new < 1:
+            raise ValueError("n_new must be >= 1")
+        doc = self.docs[doc_id]
+        if (not doc.pending and doc.suggest_fresh and doc.invalid_from is None
+                and doc.suggestion is not None
+                and len(doc.suggestion) >= n_new):
+            self.stats.suggest_cached_hits += 1
+            return doc.suggestion[:n_new].copy()
         self.submit_suggest(doc_id, n_new)
         self.flush()
-        doc = self.docs[doc_id]
         if not doc.suggest_fresh:
             self._refresh_doc(doc)
         return doc.suggestion.copy()
@@ -888,14 +926,31 @@ class BatchServer:
             self._refresh_doc(doc)
 
     def _refresh_doc(self, doc: _BatchDoc) -> None:
+        # Redundant-refresh fast path: the document's content watermarks are
+        # unchanged since the suggestion it already holds (``invalid_from``
+        # clear), so the deterministic greedy continuation cannot differ —
+        # serve the cached tokens without any prefill/dispatch. Reached e.g.
+        # by a re-subscription at an unchanged-or-shorter length.
+        if (doc.invalid_from is None and doc.suggestion is not None
+                and len(doc.suggestion) >= doc.suggest_n):
+            doc.suggestion = doc.suggestion[:doc.suggest_n]
+            doc.suggest_fresh = True
+            self.stats.suggest_cached_hits += 1
+            return
         sugg = self.suggester
         eng = self.engine(self.C, self.R)
         self.store.ensure_hot(doc)  # KV export reads the device state
+        on_token = None
+        if self.on_suggest_token is not None:
+            serial, hook = doc.suggest_serial + 1, self.on_suggest_token
+
+            def on_token(tok, _id=doc.doc_id, _serial=serial, _hook=hook):
+                _hook(_id, _serial, int(np.asarray(tok).reshape(-1)[0]))
         try:
             toks = sugg.refresh(
                 eng, doc.state, key=doc.doc_id, n_new=doc.suggest_n,
                 invalid_from=doc.invalid_from,
-                export_invalid_from=doc.touched_from)
+                export_invalid_from=doc.touched_from, on_token=on_token)
         except PositionHeadroomError:
             # the tail gap is exhausted: re-spread the ids (a scheduled
             # defrag + full-forward re-ingest) and retry once
@@ -903,10 +958,11 @@ class BatchServer:
             toks = sugg.refresh(
                 eng, doc.state, key=doc.doc_id, n_new=doc.suggest_n,
                 invalid_from=doc.invalid_from,
-                export_invalid_from=doc.touched_from)
+                export_invalid_from=doc.touched_from, on_token=on_token)
         doc.suggestion = toks
         doc.suggest_fresh = True
         doc.invalid_from = None
+        doc.suggest_serial += 1
         self.stats.suggest_refreshes += 1
 
     # ------------------------------------------------------------- outputs

@@ -11,6 +11,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import transformer as T
@@ -35,18 +36,27 @@ def make_serve_step(cfg: ArchConfig, *, sample: bool = False, temperature: float
 
 
 def greedy_continue(step, params, caches, logits_last: jax.Array,
-                    gen_positions: jax.Array) -> tuple[jax.Array, jax.Array]:
+                    gen_positions: jax.Array,
+                    on_token=None) -> tuple[jax.Array, jax.Array]:
     """The greedy continuation inner loop shared by ``greedy_decode`` and
     the suggestion engine: ``logits_last`` [b, vocab] (audio [b, cb, vocab])
     are the logits of the last consumed token; ``gen_positions`` [b, n_new]
     the continuation position ids. Runs ``n_new - 1`` decode steps (the
-    first token needs none). Returns (tokens [b, n_new], caches)."""
+    first token needs none). ``on_token``, when given, is called with each
+    [b, 1] token array as the loop produces it — a streaming tap (the async
+    front end forwards tokens to subscribers before the continuation is
+    complete); it forces a device sync per token, so leave it None on
+    latency-insensitive paths. Returns (tokens [b, n_new], caches)."""
     n_new = gen_positions.shape[1]
     cur = jnp.argmax(logits_last, axis=-1).astype(jnp.int32)[:, None]
+    if on_token is not None:
+        on_token(np.asarray(cur))
     out = [cur]
     for i in range(1, n_new):
         logits, caches = step(params, caches, cur, gen_positions[:, i - 1 : i])
         cur = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        if on_token is not None:
+            on_token(np.asarray(cur))
         out.append(cur)
     return jnp.concatenate(out, axis=1), caches
 

@@ -148,7 +148,8 @@ class SuggestionEngine:
     def refresh(self, engine: JitIncrementalEngine, state: JitState, *,
                 key=None, n_new: Optional[int] = None,
                 invalid_from: Optional[int] = None,
-                export_invalid_from: Optional[int] = None) -> np.ndarray:
+                export_invalid_from: Optional[int] = None,
+                on_token=None) -> np.ndarray:
         """Recompute the greedy continuation of the document in ``state``.
 
         ``invalid_from`` — earliest *position id* edited since the last
@@ -160,7 +161,9 @@ class SuggestionEngine:
         or capacity change). Rows before the relevant boundary are reused;
         rows at/after it — whose values an edit may have changed, directly
         or through count renormalization / VQ code flips — are re-prefilled
-        through the decode path. Returns the ``n_new`` greedy tokens."""
+        through the decode path. ``on_token`` streams each decoded token as
+        it is produced (see ``serving.decode.greedy_continue``). Returns the
+        ``n_new`` greedy tokens."""
         n_new = self.default_new if n_new is None else int(n_new)
         if n_new < 1:
             raise ValueError("n_new must be >= 1")
@@ -235,7 +238,8 @@ class SuggestionEngine:
         gen_pos = jnp.asarray(
             last_pos + 1 + np.arange(n_new, dtype=np.int32))[None]
         toks, caches = greedy_continue(self._step, self.params, caches,
-                                       last_logits, gen_pos)
+                                       last_logits, gen_pos,
+                                       on_token=on_token)
         out = np.asarray(toks[0], np.int32)
 
         if key is not None:

@@ -1,0 +1,390 @@
+"""Deadline-batching async front end == sequential BatchServer (ISSUE 6).
+
+The exactness ladder for ``serving.async_server``:
+
+1. concurrent-load differential — client threads interleaving edits and
+   suggestion requests through ``AsyncBatchServer`` must produce final
+   documents and suggestion tokens identical to a sequential ``BatchServer``
+   fed each document's requests in the same per-document order;
+2. both dispatch triggers exercised explicitly — deadline expiry (partial
+   bucket, a huge ``bucket_docs``) and bucket-full (a huge delay);
+3. the re-ingest paths mid-stream — forced slot-buffer grow and forced
+   defrag — stay token-exact through the async path;
+4. streaming subscriptions deliver per-token events that reassemble into
+   exactly the completed continuation, serials strictly increasing;
+5. the satellite regressions: back-to-back ``suggest`` with unchanged
+   watermarks must not re-enter the dispatch path, and the latency
+   histograms (``serving.latency``) must populate with sane percentiles.
+"""
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.vq_opt_125m import smoke_config
+from repro.models import transformer as T
+from repro.serving.async_server import AsyncBatchServer
+from repro.serving.batch_server import BatchServer
+from repro.serving.jit_engine import JitIncrementalEngine
+from repro.serving.latency import LatencyStats
+from repro.serving.suggest import SuggestionEngine, oracle_suggestion
+
+N_NEW = 4
+WAIT = 300.0  # generous ticket timeout: jit compiles land on first rounds
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_config(vqt=True)
+    params = T.init_params(jax.random.PRNGKey(1), cfg)
+    oracle_eng = JitIncrementalEngine(params, cfg, edit_capacity=4,
+                                      row_capacity=16)
+    oracle_sugg = SuggestionEngine(params, cfg)
+    return cfg, params, oracle_eng, oracle_sugg
+
+
+def _server(setup, **kw):
+    cfg, params, _, _ = setup
+    kw.setdefault("edit_capacity", 4)
+    kw.setdefault("row_capacity", 16)
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("min_doc_capacity", 16)
+    return BatchServer(params, cfg, **kw)
+
+
+def _oracle(setup, srv, doc_id, n_new=N_NEW):
+    cfg, params, oracle_eng, oracle_sugg = setup
+    doc = srv.docs[doc_id]
+    return oracle_suggestion(params, cfg, oracle_eng, doc.tokens,
+                             doc.positions, doc.valid, n_new,
+                             suggester=oracle_sugg)
+
+
+# --------------------------------------------------------------- LatencyStats
+
+
+def test_latency_stats_percentiles():
+    ls = LatencyStats()
+    for v in range(1, 101):
+        ls.record(float(v))
+    assert ls.count == 100
+    assert ls.max_ms == 100.0
+    assert ls.mean_ms == pytest.approx(50.5)
+    assert ls.p50 == pytest.approx(50.5)
+    assert 99.0 <= ls.p99 <= 100.0
+    s = ls.summary()
+    assert set(s) == {"count", "mean_ms", "p50_ms", "p99_ms", "max_ms"}
+    assert s["count"] == 100 and s["p50_ms"] <= s["p99_ms"] <= s["max_ms"]
+
+
+def test_latency_stats_reservoir_bounded():
+    ls = LatencyStats(sample_cap=64)
+    for v in range(1000):
+        ls.record(float(v))
+    # exact aggregates over ALL samples; reservoir stays bounded
+    assert ls.count == 1000 and ls.max_ms == 999.0
+    assert len(ls.samples) == 64
+    assert 0.0 <= ls.p50 <= 999.0
+
+
+def test_latency_stats_empty():
+    ls = LatencyStats()
+    assert ls.p50 == 0.0 and ls.p99 == 0.0 and ls.mean_ms == 0.0
+
+
+# ---------------------------------------------- satellite: cached suggestions
+
+
+def test_back_to_back_suggest_no_redispatch(setup):
+    """Unchanged watermarks => ``suggest`` serves the cached continuation
+    without re-entering the prefill/dispatch path (ISSUE 6 satellite)."""
+    cfg = setup[0]
+    srv = _server(setup)
+    rng = np.random.default_rng(3)
+    srv.open_document("d", list(rng.integers(0, cfg.vocab, 12)))
+    first = srv.suggest("d", N_NEW)
+    before = (srv.stats.batch_steps, srv.stats.full_forwards,
+              srv.stats.suggest_refreshes, srv.suggest_stats.refreshes,
+              srv.suggest_stats.decode_steps)
+    hits0 = srv.stats.suggest_cached_hits
+
+    again = srv.suggest("d", N_NEW)
+    np.testing.assert_array_equal(again, first)
+    shorter = srv.suggest("d", 2)  # prefix of the cached continuation
+    np.testing.assert_array_equal(shorter, first[:2])
+    after = (srv.stats.batch_steps, srv.stats.full_forwards,
+             srv.stats.suggest_refreshes, srv.suggest_stats.refreshes,
+             srv.suggest_stats.decode_steps)
+    assert after == before, "cached suggest re-entered the dispatch path"
+    assert srv.stats.suggest_cached_hits == hits0 + 2
+
+    # an edit invalidates the watermark: the next suggest really refreshes
+    srv.submit_replace("d", 2, int(rng.integers(cfg.vocab)))
+    refreshed = srv.suggest("d", N_NEW)
+    assert srv.suggest_stats.refreshes == before[3] + 1
+    np.testing.assert_array_equal(refreshed, _oracle(setup, srv, "d"))
+
+
+# ------------------------------------------------ concurrent-load differential
+
+
+def _drive_client(asrv, cfg, doc_id, seed, ops_log, sugg_log, n_rounds=3):
+    """One client session: bursts of edits, then a blocking suggestion.
+    Edits are generated against a local reference document, so the stream
+    is deterministic per document no matter how rounds interleave."""
+    rng = np.random.default_rng(seed)
+    ref = ops_log[doc_id][0]
+    for _ in range(n_rounds):
+        burst = []
+        for _ in range(int(rng.integers(1, 4))):
+            kind = str(rng.choice(["replace", "insert", "delete"],
+                                  p=[0.6, 0.3, 0.1]))
+            if kind == "delete" and len(ref) <= 6:
+                kind = "replace"
+            tok = int(rng.integers(cfg.vocab))
+            if kind == "insert":
+                pos = int(rng.integers(len(ref) + 1))
+                asrv.submit_insert(doc_id, pos, tok)
+                ref.insert(pos, tok)
+            elif kind == "delete":
+                pos = int(rng.integers(len(ref)))
+                asrv.submit_delete(doc_id, pos)
+                del ref[pos]
+            else:
+                pos = int(rng.integers(len(ref)))
+                asrv.submit_replace(doc_id, pos, tok)
+                ref[pos] = tok
+            burst.append((kind, pos, tok))
+        ops_log[doc_id].append(burst)
+        # blocking read: the suggestion reflects every edit of this burst
+        sugg_log[doc_id].append(asrv.suggest(doc_id, N_NEW).result(WAIT))
+
+
+def test_concurrent_load_matches_sequential_oracle(setup):
+    """Threads interleaving edits + suggestions through the async front end
+    match a sequential BatchServer replay token-exactly — under forced
+    deadline-expiry dispatch (bucket_docs too large to ever fill)."""
+    cfg = setup[0]
+    srv = _server(setup)
+    rng = np.random.default_rng(7)
+    doc_ids = [f"c{i}" for i in range(3)]
+    inits = {d: list(rng.integers(0, cfg.vocab, 10 + 2 * i))
+             for i, d in enumerate(doc_ids)}
+    ops_log = {d: [list(inits[d])] for d in doc_ids}  # [0] mutates into ref
+    sugg_log = {d: [] for d in doc_ids}
+
+    with AsyncBatchServer(srv, max_batch_delay_ms=5.0,
+                          bucket_docs=64) as asrv:
+        for t in [asrv.open_document(d, inits[d]) for d in doc_ids]:
+            t.result(WAIT)
+        threads = [threading.Thread(
+            target=_drive_client,
+            args=(asrv, cfg, d, 100 + i, ops_log, sugg_log))
+            for i, d in enumerate(doc_ids)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        final_tokens = {d: asrv.tokens(d).result(WAIT) for d in doc_ids}
+        astats = asrv.stats
+
+    # the bucket (64 docs) can never fill: every round was deadline-cut
+    assert astats.deadline_rounds > 0 and astats.full_rounds == 0
+    assert astats.requests_failed == 0
+    n_edits = sum(len(b) for d in doc_ids for b in ops_log[d][1:])
+    assert astats.admitted_edits == n_edits
+    assert astats.admitted_suggests == sum(len(s) for s in sugg_log.values())
+
+    # sequential oracle: a fresh BatchServer fed each document's requests in
+    # the same per-document order
+    srv2 = _server(setup)
+    for d in doc_ids:
+        srv2.open_document(d, inits[d])
+        for burst in ops_log[d][1:]:
+            for kind, pos, tok in burst:
+                getattr(srv2, f"submit_{kind}")(
+                    *((d, pos) if kind == "delete" else (d, pos, tok)))
+            want = srv2.suggest(d, N_NEW)
+            got = sugg_log[d].pop(0)
+            np.testing.assert_array_equal(got, want)
+        np.testing.assert_array_equal(final_tokens[d], srv2.tokens(d))
+        assert list(final_tokens[d]) == ops_log[d][0]
+
+    # latency SLO fields populated (per-edit and per-suggestion histograms)
+    assert srv.stats.edit_latency.count == n_edits
+    assert srv.stats.suggest_latency.count > 0
+    for h in (srv.stats.edit_latency, srv.stats.suggest_latency):
+        assert h.p50 <= h.p99 <= h.max_ms and h.mean_ms > 0
+
+
+def test_bucket_full_dispatches_before_deadline(setup):
+    """With an hour-long deadline, rounds still dispatch the moment
+    ``bucket_docs`` distinct documents have admitted work."""
+    cfg = setup[0]
+    srv = _server(setup)
+    rng = np.random.default_rng(5)
+    asrv = AsyncBatchServer(srv, max_batch_delay_ms=3_600_000.0,
+                            bucket_docs=2)
+    try:
+        opens = [asrv.open_document(d, list(rng.integers(0, cfg.vocab, 8)))
+                 for d in ("a", "b")]
+        for t in opens:  # 2 opens = full bucket: served despite the deadline
+            t.result(WAIT)
+        edits = [asrv.submit_replace(d, 1, int(rng.integers(cfg.vocab)))
+                 for d in ("a", "b")]
+        for t in edits:
+            t.result(WAIT)
+        assert asrv.stats.full_rounds >= 2
+        assert asrv.stats.deadline_rounds == 0
+    finally:
+        asrv.close()
+    np.testing.assert_array_equal(srv.suggest("a", N_NEW),
+                                  _oracle(setup, srv, "a"))
+
+
+def test_failed_request_does_not_stall_the_loop(setup):
+    """A bad request fails ITS ticket; the scheduler keeps serving."""
+    cfg = setup[0]
+    srv = _server(setup)
+    rng = np.random.default_rng(9)
+    with AsyncBatchServer(srv, max_batch_delay_ms=2.0) as asrv:
+        bad = asrv.submit_replace("nope", 0, 1)
+        good = asrv.open_document("ok", list(rng.integers(0, cfg.vocab, 8)))
+        with pytest.raises(KeyError):
+            bad.result(WAIT)
+        good.result(WAIT)
+        out = asrv.suggest("ok", N_NEW).result(WAIT)
+        assert asrv.stats.requests_failed == 1
+    np.testing.assert_array_equal(out, _oracle(setup, srv, "ok"))
+
+
+def test_opens_coalesce_into_one_round(setup):
+    """Opens admitted within one deadline window land in a single round
+    (and therefore a single batched open_documents ingest)."""
+    cfg = setup[0]
+    srv = _server(setup)
+    rng = np.random.default_rng(2)
+    with AsyncBatchServer(srv, max_batch_delay_ms=100.0,
+                          bucket_docs=64) as asrv:
+        docs = {f"o{i}": list(rng.integers(0, cfg.vocab, 9))
+                for i in range(3)}
+        tickets = [asrv.open_document(d, toks) for d, toks in docs.items()]
+        for t in tickets:
+            t.result(WAIT)
+        assert asrv.stats.rounds == 1
+        assert asrv.stats.admitted_opens == 3
+        for d, toks in docs.items():
+            assert list(asrv.tokens(d).result(WAIT)) == toks
+
+
+# -------------------------------------------------- re-ingests via async path
+
+
+def test_async_forced_grow_matches_oracle(setup):
+    """Insert bursts over a min-capacity-8 document force an n_cap-doubling
+    re-ingest mid-stream; the async path stays token-exact through it."""
+    cfg = setup[0]
+    srv = _server(setup, min_doc_capacity=8)
+    rng = np.random.default_rng(11)
+    ref = list(rng.integers(0, cfg.vocab, 7))
+    with AsyncBatchServer(srv, max_batch_delay_ms=3.0) as asrv:
+        asrv.open_document("g", ref).result(WAIT)
+        for i in range(8):
+            pos = int(rng.integers(len(ref) + 1))
+            tok = int(rng.integers(cfg.vocab))
+            asrv.submit_insert("g", pos, tok)
+            ref.insert(pos, tok)
+            got = asrv.suggest("g", N_NEW).result(WAIT)
+            np.testing.assert_array_equal(got, _oracle(setup, srv, "g"),
+                                          err_msg=f"insert {i}")
+        assert list(asrv.tokens("g").result(WAIT)) == ref
+    assert srv.stats.grows >= 1
+
+
+def test_async_forced_defrag_matches_oracle(setup):
+    """A tiny position pool exhausts insertion gaps mid-stream: ids
+    re-spread (defrag + full re-ingest) and all suggestion reuse drops; the
+    async path stays token-exact through it."""
+    cfg = setup[0]
+    srv = _server(setup, max_batch=2, pos_pool=64)
+    rng = np.random.default_rng(13)
+    ref = list(rng.integers(0, cfg.vocab, 8))
+    with AsyncBatchServer(srv, max_batch_delay_ms=3.0) as asrv:
+        asrv.open_document("d", ref).result(WAIT)
+        for i in range(7):
+            tok = int(rng.integers(cfg.vocab))
+            asrv.submit_insert("d", 3, tok)
+            ref.insert(3, tok)
+            got = asrv.suggest("d", N_NEW).result(WAIT)
+            np.testing.assert_array_equal(got, _oracle(setup, srv, "d"),
+                                          err_msg=f"insert {i}")
+        assert list(asrv.tokens("d").result(WAIT)) == ref
+    assert srv.stats.defrags >= 1
+
+
+# ------------------------------------------------------------------- streaming
+
+
+def test_subscription_streams_tokens_then_suggestions(setup):
+    """A subscription delivers per-token events as the decode loop runs,
+    then the completed continuation; token events reassemble into exactly
+    the suggestion, serials strictly increase across refreshes."""
+    cfg = setup[0]
+    srv = _server(setup)
+    rng = np.random.default_rng(17)
+    ref = list(rng.integers(0, cfg.vocab, 10))
+    with AsyncBatchServer(srv, max_batch_delay_ms=3.0) as asrv:
+        asrv.open_document("s", ref).result(WAIT)
+        stream = asrv.subscribe("s", N_NEW)
+        serial0, sugg0 = stream.next_suggestion(WAIT)
+        np.testing.assert_array_equal(sugg0, _oracle(setup, srv, "s"))
+
+        # two edit bursts -> two (or more) edit-triggered refreshes
+        for _ in range(2):
+            pos = int(rng.integers(len(ref)))
+            tok = int(rng.integers(cfg.vocab))
+            asrv.submit_replace("s", pos, tok).result(WAIT)
+            ref[pos] = tok
+            asrv.flush(WAIT)
+        np.testing.assert_array_equal(
+            asrv.suggest("s", N_NEW).result(WAIT), _oracle(setup, srv, "s"))
+        asrv.unsubscribe(stream)
+
+    # replay the event stream: per refresh, n_new token events indexed
+    # 0..n-1 whose tokens equal the completed continuation that follows
+    events, tokens, last_serial = [], {}, serial0
+    while True:
+        kind, serial, *rest = stream.get(timeout=1.0)
+        if kind == "closed":
+            break
+        events.append((kind, serial, rest))
+        if kind == "token":
+            idx, tok = rest
+            tokens.setdefault(serial, [])
+            assert idx == len(tokens[serial]), "token events out of order"
+            tokens[serial].append(tok)
+        else:
+            assert kind == "suggestion"
+            assert serial > last_serial or serial == serial0
+            last_serial = max(last_serial, serial)
+            assert tokens[serial] == list(rest[0]), \
+                "streamed tokens disagree with the completed continuation"
+    refreshes = [e for e in events if e[0] == "suggestion"]
+    assert len(refreshes) >= 2  # both bursts produced a delivery
+    assert srv.stats.suggest_latency.count > 0
+
+
+def test_close_document_closes_streams(setup):
+    cfg = setup[0]
+    srv = _server(setup)
+    rng = np.random.default_rng(19)
+    with AsyncBatchServer(srv, max_batch_delay_ms=3.0) as asrv:
+        asrv.open_document("z", list(rng.integers(0, cfg.vocab, 8))).result(
+            WAIT)
+        stream = asrv.subscribe("z", N_NEW)
+        stream.next_suggestion(WAIT)
+        asrv.close_document("z").result(WAIT)
+        with pytest.raises(RuntimeError, match="closed"):
+            stream.next_suggestion(5.0)
+        assert "z" not in srv.docs

@@ -1,0 +1,72 @@
+"""Persistent-compilation-cache plumbing (ISSUE 6 satellite).
+
+The heavy claim — a second process reloads compiled executables from disk —
+is exercised by CI's bench-gate job (actions cache keyed on the jax
+version); these tests cover the opt-in plumbing: off by default, env-var
+and explicit-dir activation, idempotence, and the ``BatchServer`` flag.
+"""
+import os
+
+import jax
+import pytest
+
+from repro.common import compile_cache
+from repro.common.compile_cache import (
+    ENV_VAR, enable_persistent_compilation_cache,
+)
+
+
+@pytest.fixture(autouse=True)
+def _isolate(monkeypatch):
+    """Each test sees a clean module state and no ambient env var; the
+    jax config value is restored afterwards so other suites are unaffected."""
+    monkeypatch.delenv(ENV_VAR, raising=False)
+    monkeypatch.setattr(compile_cache, "_enabled_dir", None)
+    before = jax.config.jax_compilation_cache_dir
+    yield
+    jax.config.update("jax_compilation_cache_dir", before)
+
+
+def test_off_without_dir_or_env():
+    assert enable_persistent_compilation_cache() is None
+
+
+def test_env_var_activates(tmp_path, monkeypatch):
+    target = tmp_path / "jcc-env"
+    monkeypatch.setenv(ENV_VAR, str(target))
+    got = enable_persistent_compilation_cache()
+    assert got == str(target)
+    assert os.path.isdir(got)
+    assert jax.config.jax_compilation_cache_dir == got
+
+
+def test_explicit_dir_wins_and_is_idempotent(tmp_path, monkeypatch):
+    monkeypatch.setenv(ENV_VAR, str(tmp_path / "ignored"))
+    target = tmp_path / "jcc-explicit"
+    got = enable_persistent_compilation_cache(str(target))
+    assert got == str(target)
+    assert enable_persistent_compilation_cache(str(target)) == got
+    assert not (tmp_path / "ignored").exists()
+    # cache-everything thresholds: the serving bucket steps are small
+    assert jax.config.jax_persistent_cache_min_compile_time_secs == 0
+    assert jax.config.jax_persistent_cache_min_entry_size_bytes == -1
+
+
+def test_batch_server_flag(tmp_path):
+    """The BatchServer kwarg threads through without requiring the env."""
+    from repro.configs.vq_opt_125m import smoke_config
+    from repro.models import transformer as T
+    from repro.serving.batch_server import BatchServer
+
+    cfg = smoke_config(vqt=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    target = tmp_path / "jcc-srv"
+    srv = BatchServer(params, cfg, edit_capacity=4, row_capacity=16,
+                      max_batch=2, min_doc_capacity=16,
+                      compilation_cache_dir=str(target))
+    assert srv.compilation_cache_dir == str(target)
+    assert os.path.isdir(target)
+    # default stays off
+    srv2 = BatchServer(params, cfg, edit_capacity=4, row_capacity=16,
+                       max_batch=2, min_doc_capacity=16)
+    assert srv2.compilation_cache_dir is None
