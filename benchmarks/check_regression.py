@@ -56,6 +56,43 @@ GATES = {
             "ops_speedup": {"higher_is_better": True, "rel_tol": 0.10},
             "ops_incremental": {"higher_is_better": False, "rel_tol": 0.10},
             "traced_shapes": {"higher_is_better": False, "abs_tol": 2},
+            # ISSUE 7: the warm measured pass must compile NOTHING (the
+            # warmup replays the identical trace) ...
+            "measured_pass_new_shapes": {"must_equal": 0},
+            # ... and a structural stream must stay within a small factor
+            # of the replace-only fast path — same-runner wall-clock
+            # ratio (synced + warmup-replayed), so runner speed divides
+            # out; the ceiling is the fused-ragged-hot-path SLO. Only the
+            # mixed record carries it (it IS the cross-workload ratio).
+            "wall_ratio_mixed_vs_replace": {
+                "higher_is_better": False, "abs_tol": 0.75,
+                "must_be_lt": 3.0, "optional": True},
+        },
+    },
+    # ISSUE 7 satellite: the fused hot path's structural wins, read from
+    # the compiled modules themselves (launch census, XLA cost model,
+    # achieved-vs-roofline fraction) and from the scheduler's shape
+    # counter — all deterministic for a pinned jax version (the bench-gate
+    # job pins one; re-anchor on version bumps). Wall-clock never appears.
+    "hot_path": {
+        "bench": "BENCH_hot_path.json",
+        "baseline": "BASELINE_hot_path.json",
+        "key": "workload",
+        "identity": ("doc_len",),
+        "metrics": {
+            "launches": {"higher_is_better": False, "rel_tol": 0.15,
+                         "optional": True},
+            "xla_flops": {"higher_is_better": False, "rel_tol": 0.10,
+                          "optional": True},
+            "useful_flop_fraction": {"higher_is_better": True,
+                                     "rel_tol": 0.15, "optional": True},
+            "compiled_shapes_structural_stream": {
+                "higher_is_better": False, "abs_tol": 0, "optional": True},
+            "kernel_launches_per_edit": {
+                "higher_is_better": False, "abs_tol": 0.25,
+                "optional": True},
+            "device_grows": {"higher_is_better": True, "abs_tol": 0,
+                             "optional": True},
         },
     },
     "suggest_reuse": {
@@ -161,6 +198,8 @@ def check_gate(name: str, gate: dict, results_dir: str) -> list[str]:
                     "the baseline or fix the CI invocation")
         for metric, rule in gate["metrics"].items():
             have, want = frec.get(metric), brec.get(metric)
+            if have is None and want is None and rule.get("optional"):
+                continue  # metric legitimately absent from this workload
             if have is None or want is None:
                 failures.append(f"{name}/{wk}: metric {metric} missing "
                                 f"(fresh={have!r}, baseline={want!r})")

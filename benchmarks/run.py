@@ -94,6 +94,14 @@ def main():
                         n_edits=64 if args.full else 16)
     summary.append({"benchmark": "edit_mix", "rows": recs})
 
+    print(f"\n=== Hot path: launch census + roofline fractions "
+          f"({time.time()-t0:.0f}s) ===")
+    from benchmarks import hot_path
+
+    recs = hot_path.run(doc_len=128 if args.full else 64,
+                        n_edits=48 if args.full else 24)
+    summary.append({"benchmark": "hot_path", "rows": recs})
+
     print(f"\n=== Suggestion reuse: continuation decoding over edits "
           f"({time.time()-t0:.0f}s) ===")
     from benchmarks import suggest_reuse

@@ -14,3 +14,23 @@ def next_pow2(n: int, minimum: int = 1) -> int:
     while c < n:
         c *= 2
     return c
+
+
+def capacity_class(n_cap: int, minimum: int, step: int = 4) -> int:
+    """Padded device capacity for a logical slot capacity ``n_cap``: the
+    smallest ``minimum * step**k`` >= ``n_cap`` (DESIGN.md §9 "the fused
+    ragged hot path").
+
+    Compiled dispatch shapes are keyed on the PADDED capacity, so a
+    coarser-than-pow2 class grid (``step=4`` by default) lets one compiled
+    step serve a *range* of logical ``n_cap`` buckets: a document whose
+    slot buffer doubles inside its class grows with pure host bookkeeping —
+    no device reshape, no re-jit. ``step=2`` degenerates to the plain
+    power-of-two lattice (one class per ``n_cap``, the pre-ragged
+    behavior)."""
+    if step < 2:
+        raise ValueError("capacity_class step must be >= 2")
+    c = max(int(minimum), 1)
+    while c < n_cap:
+        c *= step
+    return c

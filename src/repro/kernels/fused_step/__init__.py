@@ -1,0 +1,4 @@
+from repro.kernels.fused_step.ops import (
+    fused_patch_assign, fused_patch_assign_batched,
+)
+from repro.kernels.fused_step.ref import fused_patch_assign_ref

@@ -1,0 +1,199 @@
+"""Pallas TPU kernel: the fused incremental edit step (DESIGN.md §9).
+
+One launch per layer replaces the old per-op chain (column-patch kernel →
+host-side T accumulate → requantize einsums → argmax): per (row-block,
+vq-head) grid cell the kernel
+
+  1. applies the old-minus/new-plus attention column patch for the
+     ``heads_per_vq`` attention heads feeding this vq head:
+
+         ΔT[i, h, :] = Σ_c gelu(q[i,h]·k_new[c,h]·scale) vc_new[c,h,:]
+                     − Σ_c gelu(q[i,h]·k_old[c,h]·scale) vc_old[c,h,:]
+
+     (two MXU matmuls per head, exactly the ``incr_patch`` body);
+  2. accumulates ``T = T_base + ΔT`` per head and writes it back;
+  3. re-quantizes in score space: ``s = Σ_heads T / counts + vq_bias``,
+     ``codes = argmax_Q s`` (VPU reduce) — the ``vq_assign`` trick without
+     a second launch or an HBM round-trip of T.
+
+Changed-column gating, causal structure, row validity and dirty-row
+exclusion are all folded into one [rows, C] mask on the host side of the
+same jit — the kernel body only ever multiplies by it, so its compiled
+shape is blind to WHICH rows/columns are live.
+
+Raggedness: the grid iterates over PADDED row blocks of a capacity-class
+buffer; rows whose ``valid`` bit is off (free slots, the padding beyond a
+document's logical capacity) have an all-zero mask row and ``counts``
+clamped to 1, so one compiled step serves every logical ``n_cap`` inside
+the class (``repro.common.bucketing.capacity_class``).
+
+Head-group blocking: stacked weights order attention heads as
+``h = hh * heads_per_vq + j`` (see ``_weights_from_params``'s
+``cb_per_head`` reshape), so blocking the head axis by ``heads_per_vq`` at
+block index ``hh`` hands each grid cell exactly the heads its vq head
+sums over.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, kn_ref, ko_ref, vcn_ref, vco_ref, mask_ref, tb_ref,
+            counts_ref, bias_ref, t_ref, codes_ref, *, scale: float, g: int):
+    # q_ref: [BR, g, dh]; kn/ko: [g, C, dh]; vcn/vco: [g, C, Q];
+    # mask: [BR, C]; tb: [BR, g, Q]; counts: [BR, 1]; bias: [1, Q];
+    # t: [BR, g, Q]; codes: [BR, 1]
+    mask = mask_ref[...].astype(jnp.float32)  # [BR, C]
+    acc = None
+    for j in range(g):
+        q = q_ref[:, j, :]  # [BR, dh]
+
+        def contrib(k_ref, vc_ref, sign):
+            s = jax.lax.dot_general(
+                q, k_ref[j], (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            ) * scale  # [BR, C]
+            w = jax.nn.gelu(s, approximate=True) * mask
+            return sign * jax.lax.dot_general(
+                w, vc_ref[j].astype(jnp.float32), (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )  # [BR, Q]
+
+        Tj = (tb_ref[:, j, :].astype(jnp.float32)
+              + contrib(kn_ref, vcn_ref, 1.0) + contrib(ko_ref, vco_ref, -1.0))
+        t_ref[:, j, :] = Tj.astype(t_ref.dtype)
+        acc = Tj if acc is None else acc + Tj
+    scores = acc / counts_ref[...] + bias_ref[0][None, :]  # [BR, Q]
+    codes_ref[:, 0] = jnp.argmax(scores, axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("heads_per_vq", "block_r", "interpret"))
+def fused_step_kernel(
+    q: jax.Array,  # [n, H, dh] every row's cached queries
+    k_new: jax.Array,  # [H, C, dh] dirty-slot key buffer (new values)
+    k_old: jax.Array,  # [H, C, dh] old values
+    vc_new: jax.Array,  # [H, C, Q] value·codebook products (new)
+    vc_old: jax.Array,  # [H, C, Q]
+    mask: jax.Array,  # [n, C] {0,1}: col gating & causal & row_valid & ~dirty
+    T_base: jax.Array,  # [n, H, Q] scores with dirty rows pre-recomputed
+    counts: jax.Array,  # [n] f32 attended-column counts (clamped >= 1)
+    vq_bias: jax.Array,  # [hq, Q]
+    *,
+    heads_per_vq: int,
+    block_r: int = 128,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (T_all [n, H, Q] f32, codes [n, hq] int32)."""
+    n, H, dh = q.shape
+    C = k_new.shape[1]
+    Q = vc_new.shape[-1]
+    g = heads_per_vq
+    hq = H // g
+    scale = dh ** -0.5
+    counts = counts.astype(jnp.float32).reshape(n, 1)
+    pad = (-n) % block_r
+    if pad:
+        q = jnp.pad(q, ((0, pad), (0, 0), (0, 0)))
+        mask = jnp.pad(mask, ((0, pad), (0, 0)))
+        T_base = jnp.pad(T_base, ((0, pad), (0, 0), (0, 0)))
+        # pad counts with 1 so the padded rows' score divide stays finite
+        counts = jnp.pad(counts, ((0, pad), (0, 0)), constant_values=1.0)
+    Np = n + pad
+    grid = (Np // block_r, hq)
+    T_all, codes = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, g=g),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, g, dh), lambda i, h: (i, h, 0)),
+            pl.BlockSpec((g, C, dh), lambda i, h: (h, 0, 0)),
+            pl.BlockSpec((g, C, dh), lambda i, h: (h, 0, 0)),
+            pl.BlockSpec((g, C, Q), lambda i, h: (h, 0, 0)),
+            pl.BlockSpec((g, C, Q), lambda i, h: (h, 0, 0)),
+            pl.BlockSpec((block_r, C), lambda i, h: (i, 0)),
+            pl.BlockSpec((block_r, g, Q), lambda i, h: (i, h, 0)),
+            pl.BlockSpec((block_r, 1), lambda i, h: (i, 0)),
+            pl.BlockSpec((1, Q), lambda i, h: (h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_r, g, Q), lambda i, h: (i, h, 0)),
+            pl.BlockSpec((block_r, 1), lambda i, h: (i, h)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Np, H, Q), jnp.float32),
+            jax.ShapeDtypeStruct((Np, hq), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q, k_new, k_old, vc_new, vc_old, mask, T_base, counts, vq_bias)
+    return T_all[:n], codes[:n]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("heads_per_vq", "block_r", "interpret"))
+def fused_step_kernel_batched(
+    q: jax.Array,  # [B, n, H, dh]
+    k_new: jax.Array,  # [B, H, C, dh]
+    k_old: jax.Array,  # [B, H, C, dh]
+    vc_new: jax.Array,  # [B, H, C, Q]
+    vc_old: jax.Array,  # [B, H, C, Q]
+    mask: jax.Array,  # [B, n, C]
+    T_base: jax.Array,  # [B, n, H, Q]
+    counts: jax.Array,  # [B, n]
+    vq_bias: jax.Array,  # [hq, Q] (shared across the batch)
+    *,
+    heads_per_vq: int,
+    block_r: int = 128,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Batched-serving variant: same fused body over a grid with a leading
+    *batch* dimension — one (document, row-block, vq-head) cell per grid
+    point, so B documents' whole edit steps run as one ``pallas_call`` per
+    layer. The vq_bias block is batch-invariant and stays resident.
+    Returns (T_all [B, n, H, Q] f32, codes [B, n, hq] int32)."""
+    B, n, H, dh = q.shape
+    C = k_new.shape[2]
+    Q = vc_new.shape[-1]
+    g = heads_per_vq
+    hq = H // g
+    scale = dh ** -0.5
+    counts = counts.astype(jnp.float32).reshape(B, n, 1)
+    pad = (-n) % block_r
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad), (0, 0)))
+        T_base = jnp.pad(T_base, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        counts = jnp.pad(counts, ((0, 0), (0, pad), (0, 0)),
+                         constant_values=1.0)
+    Np = n + pad
+    grid = (B, Np // block_r, hq)
+    T_all, codes = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, g=g),
+        grid=grid,
+        in_specs=[
+            # None squeezes the batch dim so the unbatched kernel body is
+            # reused verbatim — the batch lives purely in the grid.
+            pl.BlockSpec((None, block_r, g, dh), lambda b, i, h: (b, i, h, 0)),
+            pl.BlockSpec((None, g, C, dh), lambda b, i, h: (b, h, 0, 0)),
+            pl.BlockSpec((None, g, C, dh), lambda b, i, h: (b, h, 0, 0)),
+            pl.BlockSpec((None, g, C, Q), lambda b, i, h: (b, h, 0, 0)),
+            pl.BlockSpec((None, g, C, Q), lambda b, i, h: (b, h, 0, 0)),
+            pl.BlockSpec((None, block_r, C), lambda b, i, h: (b, i, 0)),
+            pl.BlockSpec((None, block_r, g, Q), lambda b, i, h: (b, i, h, 0)),
+            pl.BlockSpec((None, block_r, 1), lambda b, i, h: (b, i, 0)),
+            pl.BlockSpec((1, Q), lambda b, i, h: (h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, block_r, g, Q), lambda b, i, h: (b, i, h, 0)),
+            pl.BlockSpec((None, block_r, 1), lambda b, i, h: (b, i, h)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Np, H, Q), jnp.float32),
+            jax.ShapeDtypeStruct((B, Np, hq), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q, k_new, k_old, vc_new, vc_old, mask, T_base, counts, vq_bias)
+    return T_all[:, :n], codes[:, :n]

@@ -1,0 +1,61 @@
+"""Jit'd public wrapper for the fused incremental edit step.
+
+The engine hands this the fully-folded per-(row, column) mask (changed
+columns & causal order & row validity & dirty-row exclusion), the score
+buffer with the dirty rows' full recompute already scattered in, and the
+per-row attended-column counts; the kernel does the rest in one launch per
+layer. Falls back to interpret mode off-TPU (bit-identical math, Python
+execution of the kernel body) so the whole stack runs on CPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_step.fused_step import fused_step_kernel
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:
+        return False
+
+
+def fused_patch_assign(q, k_new, k_old, vc_new, vc_old, mask, T_base, counts,
+                       vq_bias, *, heads_per_vq: int, block_r: int = 128):
+    """q: [n, H, dh]; k_*: [H, C, dh]; vc_*: [H, C, Q]; mask: [n, C];
+    T_base: [n, H, Q]; counts: [n]; vq_bias: [hq, Q].
+    Returns (T_all [n, H, Q] f32, codes [n, hq] int32) where
+    ``T_all = T_base + ΔT`` (masked old-minus/new-plus column patch) and
+    ``codes`` re-quantizes T_all in score space — one kernel launch.
+
+    The mask must already fold EVERY gate: live-column occupancy, causal
+    position order, row validity, and a zero row for every dirty row whose
+    ``T_base`` entry holds a fresh full recompute (the patch must not touch
+    those)."""
+    return fused_step_kernel(
+        q, k_new, k_old, vc_new, vc_old, mask.astype(jnp.float32), T_base,
+        counts, vq_bias, heads_per_vq=heads_per_vq, block_r=block_r,
+        interpret=not _on_tpu(),
+    )
+
+
+def fused_patch_assign_batched(q, k_new, k_old, vc_new, vc_old, mask, T_base,
+                               counts, vq_bias, *, heads_per_vq: int,
+                               block_r: int = 128):
+    """Batched serving: every per-document argument gains a leading [B]
+    axis (vq_bias stays shared) and the grid gains a batch dimension.
+    Returns (T_all [B, n, H, Q] f32, codes [B, n, hq] int32).
+
+    Direct entry point for callers holding stacked buffers; the vmapped
+    engine route (``BatchedJitEngine`` with ``use_fused_kernel=True``)
+    reaches the same batched grid through the pallas batching rule applied
+    to the unbatched ``fused_patch_assign``."""
+    from repro.kernels.fused_step.fused_step import fused_step_kernel_batched
+
+    return fused_step_kernel_batched(
+        q, k_new, k_old, vc_new, vc_old, mask.astype(jnp.float32), T_base,
+        counts, vq_bias, heads_per_vq=heads_per_vq, block_r=block_r,
+        interpret=not _on_tpu(),
+    )

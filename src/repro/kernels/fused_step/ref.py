@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the fused edit-step kernel: the unfused
+``incr_patch_ref``-style column patch chained with the inline requantize
+the jit engine used before fusion. Parity: T bit-close (the kernel
+accumulates per-head partial sums in a different order), codes exact on
+non-degenerate inputs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.incr_patch.ref import incr_patch_ref
+
+
+def fused_patch_assign_ref(q, k_new, k_old, vc_new, vc_old, mask, T_base,
+                           counts, vq_bias) -> tuple[jax.Array, jax.Array]:
+    """Same signature as ``fused_patch_assign`` minus the static config
+    (``heads_per_vq`` is inferred from ``vq_bias``).
+    Returns (T_all [n, H, Q] f32, codes [n, hq] int32)."""
+    # incr_patch_ref takes k_*/vc_* in [H, C, *] layout, like the kernel
+    dT = incr_patch_ref(q, k_new, k_old, vc_new, vc_old,
+                        mask.astype(jnp.float32))
+    T_all = T_base.astype(jnp.float32) + dT
+    n, H, Q = T_all.shape
+    hq = vq_bias.shape[0]
+    g = H // hq
+    s = T_all.reshape(n, hq, g, Q).sum(2)
+    s = s / counts.astype(jnp.float32)[:, None, None] + vq_bias[None]
+    codes = jnp.argmax(s, axis=-1).astype(jnp.int32)
+    return T_all, codes

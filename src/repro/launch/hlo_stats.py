@@ -127,6 +127,55 @@ def top_ops_by_bytes(hlo_text: str, k: int = 25) -> list[tuple[str, int, int]]:
     return [(op, c, b) for op, (c, b) in ranked]
 
 
+@dataclass
+class LaunchStats:
+    """Kernel-launch census of one compiled HLO module (the hot-path bench's
+    fusion-win metric: fewer fusions + custom-calls per step = fewer device
+    launches per edit)."""
+    fusions: int = 0
+    custom_calls: int = 0  # Pallas kernels and library calls land here
+    collectives: int = 0
+    instructions: int = 0
+
+    @property
+    def launches(self) -> int:
+        """Device-program launches the module implies: every fusion and
+        every custom-call is (at least) one kernel on the accelerator
+        timeline. Elementwise ops outside fusions are compiled into the
+        surrounding computation on CPU/TPU, so this is the stable,
+        backend-portable count."""
+        return self.fusions + self.custom_calls
+
+    def summary(self) -> dict:
+        return {"fusions": self.fusions, "custom_calls": self.custom_calls,
+                "collectives": self.collectives,
+                "instructions": self.instructions, "launches": self.launches}
+
+
+def launch_stats(hlo_text: str) -> LaunchStats:
+    """Count fusion/custom-call/collective instructions across the module.
+
+    Operates on the same ``_INSTR_RE`` parse as ``collective_stats`` —
+    post-optimization HLO (``compiled.as_text()``), where every residual
+    op boundary is explicit. Deterministic for a fixed jax/XLA version:
+    the hot-path bench gates on these counts with ``must_equal``-style
+    identity, re-anchored when the compiler version moves."""
+    st = LaunchStats()
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        opcode = m.group(3).split(".")[0]
+        st.instructions += 1
+        if opcode == "fusion":
+            st.fusions += 1
+        elif opcode == "custom-call":
+            st.custom_calls += 1
+        elif opcode in _COLLECTIVES:
+            st.collectives += 1
+    return st
+
+
 def while_trip_counts(hlo_text: str) -> list[int]:
     """Best-effort extraction of scan/while trip counts (for scaling
     per-iteration collective bytes to whole-model traffic)."""

@@ -88,7 +88,7 @@ from typing import Optional, Sequence
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.bucketing import next_pow2
+from repro.common.bucketing import capacity_class, next_pow2
 from repro.common.compile_cache import enable_persistent_compilation_cache
 from repro.configs.base import ArchConfig
 from repro.core.edits import Edit
@@ -138,8 +138,15 @@ class BatchStats:
     overflows: int = 0
     full_forwards: int = 0  # ingests + overflow/defrag/grow re-ingests
     defrags: int = 0  # gap exhaustion -> position-id re-spread
-    grows: int = 0  # slot buffer full -> n_cap doubling
+    grows: int = 0  # slot buffer full -> capacity-class jump
+    device_defrags: int = 0  # defrags served by the device-side
+    # gather + re-spread path (no host mirror round-trip; DESIGN.md §9)
+    device_grows: int = 0  # grows served by the device-side pad_state path
+    # (no full-forward re-ingest — existing slots keep their bits)
     rejits: int = 0  # distinct dispatch shapes traced
+    kernel_launches: int = 0  # device program launches on the edit path
+    # (edit dispatches, ingests/re-ingests, device pads/gathers) — the
+    # per-edit launch budget of the fused hot path
     suggest_refreshes: int = 0  # suggestion recomputes served
     suggest_invalidations: int = 0  # fresh suggestions staled by newer edits
     suggest_cached_hits: int = 0  # suggestions served from the cached
@@ -175,6 +182,23 @@ class BatchStats:
     @property
     def mean_batch(self) -> float:
         return self.batched_docs / max(self.batch_steps, 1)
+
+    @property
+    def traced_shapes(self) -> int:
+        """Distinct compiled dispatch shapes this server has traced — the
+        quantity the ragged capacity classes exist to bound (a long mixed
+        stream must stay within a fixed shape budget,
+        tests/test_mixed_edit_streams.py). Alias of ``rejits`` under the
+        name the benchmarks report."""
+        return self.rejits
+
+    @property
+    def kernel_launches_per_edit(self) -> float:
+        """Edit-path device program launches per applied edit. The fused
+        hot path's first-class wall-clock proxy: one launch per dispatch,
+        amortized over its whole bucket, with slow paths (re-ingests,
+        device pads/gathers) surfacing as fractional overhead."""
+        return self.kernel_launches / max(self.edits_applied, 1)
 
     @property
     def hot_hit_rate(self) -> float:
@@ -237,14 +261,28 @@ class BatchServer:
     def __init__(self, params: dict, cfg: ArchConfig, *, edit_capacity: int = 8,
                  row_capacity: int = 64, max_batch: int = 8,
                  min_doc_capacity: int = 16, use_patch_kernel: bool = False,
+                 use_fused_kernel: bool = True,
+                 capacity_class_step: int = 4, device_grow: bool = True,
+                 device_defrag: bool = True,
                  pos_pool: Optional[int] = None, mesh=None,
                  batch_axis: str = "data",
                  device_budget_bytes: Optional[int] = None,
                  host_budget_bytes: Optional[int] = None,
                  spill_dir: Optional[str] = None,
                  compilation_cache_dir: Optional[str] = None):
+        """The fused ragged hot path (DESIGN.md §9) is ON by default:
+        ``use_fused_kernel`` routes each layer's patch + requantize through
+        one ``fused_step`` Pallas launch; ``capacity_class_step`` spaces the
+        document capacity classes (4 = one compiled step serves a 4× range
+        of lengths; 2 = the legacy power-of-two lattice); ``device_grow`` /
+        ``device_defrag`` serve the structural slow paths on-device
+        (``pad_state`` / ``gather_slots``) instead of host re-ingests. Set
+        all four to their legacy values (False/2/False/False) to reproduce
+        the pre-fused scheduler."""
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
+        if capacity_class_step < 2:
+            raise ValueError("capacity_class_step must be >= 2")
         # persistent compilation cache (opt-in): per-(B, n_cap, C, R) bucket
         # steps survive process restarts instead of re-tracing + re-compiling
         # on every boot. None still honors $REPRO_COMPILE_CACHE_DIR.
@@ -256,12 +294,17 @@ class BatchServer:
         self.max_batch = max_batch
         self.min_doc_capacity = next_pow2(min_doc_capacity)
         self.use_patch_kernel = use_patch_kernel
+        self.use_fused_kernel = use_fused_kernel
+        self.capacity_class_step = capacity_class_step
+        self.device_grow = device_grow
+        self.device_defrag = device_defrag
         self.mesh = mesh
         self.batch_axis = batch_axis
         self.pos_pool = pos_pool or (cfg.pos_pool if cfg.pos_pool else cfg.max_seq)
         base = BatchedJitEngine(params, cfg, edit_capacity=self.C,
                                 row_capacity=self.R,
                                 use_patch_kernel=use_patch_kernel,
+                                use_fused_kernel=use_fused_kernel,
                                 mesh=mesh, batch_axis=batch_axis)
         if base.n_shards > max_batch:
             raise ValueError(
@@ -327,7 +370,8 @@ class BatchServer:
             self._engines[key] = BatchedJitEngine(
                 {}, self.cfg, edit_capacity=edit_capacity,
                 row_capacity=row_capacity,
-                use_patch_kernel=self.use_patch_kernel, mesh=self.mesh,
+                use_patch_kernel=self.use_patch_kernel,
+                use_fused_kernel=self.use_fused_kernel, mesh=self.mesh,
                 batch_axis=self.batch_axis, _weights=self._weights)
         return self._engines[key]
 
@@ -335,6 +379,15 @@ class BatchServer:
         if shape not in self._shapes_seen:
             self._shapes_seen.add(shape)
             self.stats.rejits += 1
+
+    def padded_cap(self, n: int) -> int:
+        """The capacity class serving an ``n``-slot document: the smallest
+        ``min_doc_capacity * step^k >= n``. All documents in a class share
+        one padded shape — and therefore one compiled step per (B, C, R) —
+        with valid/n_real masks carrying the real length (ragged
+        execution, DESIGN.md §9)."""
+        return capacity_class(n, self.min_doc_capacity,
+                              self.capacity_class_step)
 
     def _padded_batch(self, chunk_len: int) -> int:
         """Dispatch batch sizes are padded up to a power of two (capped at
@@ -414,7 +467,7 @@ class BatchServer:
                 raise ValueError(
                     f"document {doc_id!r} has tokens outside vocab of "
                     f"{self.cfg.vocab}")
-            n_cap = next_pow2(n, self.min_doc_capacity)
+            n_cap = self.padded_cap(n)
             alloc = PositionAllocator(n, self.pos_pool)
             padded = np.zeros(n_cap, np.int32)
             padded[:n] = toks
@@ -445,6 +498,7 @@ class BatchServer:
                 bstate = eng.batch_full_forward(
                     jnp.asarray(toks), jnp.asarray(poss), jnp.asarray(vals))
                 self._count_shape(("full", B_pad, n_cap))
+                self.stats.kernel_launches += 1
                 self._note_balance(loads)
                 for b, i in enumerate(rows):
                     if i is None:
@@ -784,6 +838,7 @@ class BatchServer:
         # all three op kinds share one compiled step per (B, n_cap, C, R):
         # the op vector is data, so `kind` is NOT part of the traced shape
         self._count_shape(("edit", B_pad, n_cap, C, R))
+        self.stats.kernel_launches += 1
         self._note_balance(loads)
         applied = 0
         for b, i in enumerate(rows):
@@ -818,6 +873,7 @@ class BatchServer:
         # column is trustworthy for suggestion KV reuse
         doc.touched_from = None
         self.stats.full_forwards += 1
+        self.stats.kernel_launches += 1
         self._count_shape(("full", doc.n_cap))
 
     def _fallback_full_forward(self, doc: _BatchDoc) -> None:
@@ -829,11 +885,16 @@ class BatchServer:
             doc.row_capacity = min(doc.row_capacity * 2, doc.n_cap)
 
     def _grow(self, doc: _BatchDoc) -> None:
-        """Slot buffer full: double ``n_cap`` (slots keep their indices, new
-        free slots appended) and re-ingest at the new shape. The first
-        dispatch in the bigger bucket re-jits — the capacity-doubling
-        policy, amortized across the fleet."""
-        old_cap, new_cap = doc.n_cap, doc.n_cap * 2
+        """Slot buffer full: step ``n_cap`` up to the next capacity class
+        (slots keep their indices, new free slots appended). With
+        ``device_grow`` the resident state is padded ON DEVICE
+        (``pad_state``: appended slots are invalid with sentinel positions
+        and zero activations, exactly the shape every masked step already
+        ignores) — no full forward, and the incremental attention history
+        survives, so ``touched_from`` is deliberately NOT cleared. The first
+        dispatch in the bigger class re-jits — amortized across the
+        fleet."""
+        old_cap, new_cap = doc.n_cap, self.padded_cap(doc.n_cap + 1)
         for name, fill in (("tokens", 0), ("valid", False),
                            ("positions", self._pos_sentinel)):
             arr = getattr(doc, name)
@@ -845,21 +906,74 @@ class BatchServer:
         self.stats.grows += 1
         if self._sugg is not None:  # capacity changed: cache shape unusable
             self._sugg.drop(doc.doc_id)
-        self._reingest(doc)
+        if not self.device_grow:
+            self._reingest(doc)
+            return
+        eng = self.engine(self.C, self.R)
+        state = self.store.ensure_hot(doc, keep=frozenset((doc.doc_id,)))
+        self.store.admit(
+            state_nbytes_for(new_cap, eng.L, eng.meta)
+            - state_nbytes_for(old_cap, eng.L, eng.meta),
+            keep=frozenset((doc.doc_id,)))
+        new_state = eng.pad_state(state, new_cap,
+                                  pos_fill=self._pos_sentinel)
+        self.store.set_hot(doc, new_state)
+        self.stats.device_grows += 1
+        self.stats.kernel_launches += 1
+        self._count_shape(("pad", old_cap, new_cap))
 
     def _defrag(self, doc: _BatchDoc) -> None:
         """Gap exhaustion: re-spread every position id evenly (paper §3.3,
         "akin to defragmentation"). Every cached activation depends on its
-        position embedding, so the document re-ingests with a full
-        forward."""
-        doc.allocator.defragment()
-        doc.positions[np.asarray(doc.slots, np.int64)] = doc.allocator.snapshot()
+        position embedding, so the full forward is unavoidable — but with
+        ``device_defrag`` the slot compaction that precedes it runs ON
+        DEVICE (``gather_slots`` permutes the resident buffers into
+        sequence order) instead of shipping token mirrors through host
+        memory, and the compacted layout feeds the SAME compiled
+        ``full_forward`` a re-ingest would run — bitwise-identical output
+        by construction (tested against the host re-ingest oracle in
+        tests/test_fused_step.py)."""
         self.stats.defrags += 1
         if self._sugg is not None:  # every position id changed: nothing in
             self._sugg.drop(doc.doc_id)  # the doc's decode cache is reusable
         doc.invalid_from = 0
         self._stale(doc)
-        self._reingest(doc)
+        if not self.device_defrag:
+            doc.allocator.defragment()
+            doc.positions[np.asarray(doc.slots, np.int64)] = \
+                doc.allocator.snapshot()
+            self._reingest(doc)
+            return
+        eng = self.engine(self.C, self.R)
+        state = self.store.ensure_hot(doc, keep=frozenset((doc.doc_id,)))
+        n = doc.n
+        # compaction permutation: live slots in sequence order first, then
+        # the free tail — slot i of the permuted buffers is token i of the
+        # document, so the re-spread ids land 1:1
+        order = np.concatenate([np.asarray(doc.slots, np.int32),
+                                np.asarray(doc.free, np.int32)])
+        doc.allocator.defragment()
+        respread = doc.allocator.snapshot()
+        permuted = eng.gather_slots(state, jnp.asarray(order))
+        new_positions = np.full(doc.n_cap, self._pos_sentinel, np.int32)
+        new_positions[:n] = respread
+        new_valid = np.zeros(doc.n_cap, bool)
+        new_valid[:n] = True
+        new_state = eng.full_forward(permuted.tokens,
+                                     _device_copy(new_positions),
+                                     _device_copy(new_valid))
+        self.store.set_hot(doc, new_state)
+        # host mirrors follow the compaction so slot indices keep matching
+        doc.tokens = doc.tokens[order]
+        doc.valid = new_valid
+        doc.positions = new_positions
+        doc.slots = list(range(n))
+        doc.free = list(range(doc.n_cap - 1, n - 1, -1))
+        doc.touched_from = None
+        self.stats.device_defrags += 1
+        self.stats.full_forwards += 1
+        self.stats.kernel_launches += 2
+        self._count_shape(("full", doc.n_cap))
 
     # ------------------------------------------------------------ suggestions
 

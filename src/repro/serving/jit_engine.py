@@ -245,7 +245,7 @@ class JitIncrementalEngine:
 
     def __init__(self, params: dict, cfg: ArchConfig, *, edit_capacity: int = 8,
                  row_capacity: int = 64, use_patch_kernel: bool = False,
-                 _weights=None):
+                 use_fused_kernel: bool = False, _weights=None):
         self.cfg = cfg
         self.C = edit_capacity
         self.R = row_capacity
@@ -253,6 +253,10 @@ class JitIncrementalEngine:
         # of the inline einsum (same math; the kernel adds a batch grid
         # dimension under vmap — see batch_engine.py).
         self.use_patch_kernel = use_patch_kernel
+        # Fuse column patch + T accumulate + requantize into ONE Pallas
+        # launch per layer (kernels/fused_step, DESIGN.md §9). Wins over
+        # use_patch_kernel, which it subsumes.
+        self.use_fused_kernel = use_fused_kernel
         if _weights is not None:
             self.W, self.extras, self.meta = _weights
         else:
@@ -452,39 +456,69 @@ class JitIncrementalEngine:
                 & (positions[col_idx][None, :] <= positions[:, None])
             ).astype(jnp.float32)  # [n, Cd]
             row_valid = valid.astype(jnp.float32)
-            if self.use_patch_kernel:
-                from repro.kernels.incr_patch import incr_patch
+            # dirty rows: full row recompute (their causal row of the
+            # position-order mask already reflects inserts/deletes). Hoisted
+            # before the patch so the fused path can pre-scatter it and
+            # exclude those rows from the patch mask — per row the result is
+            # identical to patch-then-overwrite (a dirty row's patch was
+            # discarded by the overwrite; a clean row's patch is unchanged).
+            causal_rows = causal[dirty_idx]  # [Cd, n]
+            w_rows = _gelu(jnp.einsum("che,jhe->hcj", q_all[dirty_idx], k_all)
+                           * m["scale"]) * causal_rows[None]
+            T_rows = jnp.einsum("hcj,jhq->chq", w_rows, vc_all)
+            if self.use_fused_kernel:
+                from repro.kernels.fused_step import fused_patch_assign
 
-                dT = incr_patch(
+                # patch + T accumulate + requantize in ONE launch: the mask
+                # folds every gate (live columns, causal order, row
+                # validity, dirty-row exclusion), so the compiled shape is
+                # blind to which rows/columns are live — the ragged
+                # capacity-class contract (DESIGN.md §9)
+                dirty_dense = jnp.zeros((n,), jnp.float32).at[upd].set(
+                    1.0, mode="drop")
+                pmask = col_mask * (row_valid * (1.0 - dirty_dense))[:, None]
+                T_base = state.T[li].at[upd].set(T_rows, mode="drop")
+                T_all, codes = fused_patch_assign(
                     state.q[li],
                     k_new.transpose(1, 0, 2),
                     k_old.transpose(1, 0, 2),
                     vc_new.transpose(1, 0, 2),
                     vc_old.transpose(1, 0, 2),
-                    col_mask,
-                    row_valid=row_valid,
+                    pmask, T_base, counts, Wl["vq_bias"],
+                    heads_per_vq=m["heads_per_vq"],
                 )
             else:
-                cm = col_mask * row_valid[:, None]
-                s_new = jnp.einsum("nhe,che->nhc", state.q[li], k_new) * m["scale"]
-                s_old = jnp.einsum("nhe,che->nhc", state.q[li], k_old) * m["scale"]
-                dT = jnp.einsum("nhc,chq->nhq", _gelu(s_new) * cm[:, None, :],
-                                vc_new) - jnp.einsum(
-                    "nhc,chq->nhq", _gelu(s_old) * cm[:, None, :], vc_old)
-            T_all = state.T[li] + dT
-            # dirty rows: full row recompute (their causal row of the
-            # position-order mask already reflects inserts/deletes)
-            causal_rows = causal[dirty_idx]  # [Cd, n]
-            w_rows = _gelu(jnp.einsum("che,jhe->hcj", q_all[dirty_idx], k_all)
-                           * m["scale"]) * causal_rows[None]
-            T_rows = jnp.einsum("hcj,jhq->chq", w_rows, vc_all)
-            T_all = T_all.at[upd].set(T_rows, mode="drop")
+                if self.use_patch_kernel:
+                    from repro.kernels.incr_patch import incr_patch
 
-            # re-quantize all rows (cheap: O(n·Q)); counts renormalization
-            # after inserts/deletes is automatic — counts came from the mask
-            s = T_all.reshape(n, m["hq"], m["heads_per_vq"], m["Q"]).sum(2)
-            s = s / counts[:, None, None] + Wl["vq_bias"][None]
-            codes = jnp.argmax(s, axis=-1).astype(jnp.int32)
+                    dT = incr_patch(
+                        state.q[li],
+                        k_new.transpose(1, 0, 2),
+                        k_old.transpose(1, 0, 2),
+                        vc_new.transpose(1, 0, 2),
+                        vc_old.transpose(1, 0, 2),
+                        col_mask,
+                        row_valid=row_valid,
+                    )
+                else:
+                    cm = col_mask * row_valid[:, None]
+                    s_new = jnp.einsum("nhe,che->nhc", state.q[li],
+                                       k_new) * m["scale"]
+                    s_old = jnp.einsum("nhe,che->nhc", state.q[li],
+                                       k_old) * m["scale"]
+                    dT = jnp.einsum("nhc,chq->nhq",
+                                    _gelu(s_new) * cm[:, None, :],
+                                    vc_new) - jnp.einsum(
+                        "nhc,chq->nhq", _gelu(s_old) * cm[:, None, :], vc_old)
+                T_all = state.T[li] + dT
+                T_all = T_all.at[upd].set(T_rows, mode="drop")
+
+                # re-quantize all rows (cheap: O(n·Q)); counts
+                # renormalization after inserts/deletes is automatic —
+                # counts came from the mask
+                s = T_all.reshape(n, m["hq"], m["heads_per_vq"], m["Q"]).sum(2)
+                s = s / counts[:, None, None] + Wl["vq_bias"][None]
+                codes = jnp.argmax(s, axis=-1).astype(jnp.int32)
 
             changed = jnp.any(codes != state.codes[li], axis=-1) & valid
             changed = changed.at[upd].set(True, mode="drop")
@@ -523,6 +557,63 @@ class JitIncrementalEngine:
         return JitState(tokens, positions, valid, n_real, st(new_x), st(new_q),
                         st(new_k), st(new_v), st(new_vc), st(new_T),
                         st(new_codes)), overflow
+
+    # ------------------------------------------------------- state surgery
+
+    @functools.partial(jax.jit, static_argnums=(0, 2, 3))
+    def pad_state(self, state: JitState, new_cap: int,
+                  pos_fill: int = 0) -> JitState:
+        """Grow a document's device buffers to a larger capacity class — the
+        device-side replacement for the grow-time host re-ingest.
+
+        Appended slots are free (``valid=False``, position ``pos_fill`` —
+        the scheduler's pool sentinel — token 0, zero activations): exactly
+        the reserve slots a fresh ingest at the bigger class would carry, so
+        the first insert into one takes the ordinary insert-into-free-slot
+        path (``apply_edits`` zeroes the claimed slot's k/vc itself).
+        Existing slots keep their bits untouched — valid rows stay exactly
+        what the incremental history produced, no full forward, no host
+        round-trip. O(state bytes) device copy; the first dispatch at the
+        new class re-jits (the capacity-class-doubling policy)."""
+        n = state.tokens.shape[0]
+        if new_cap < n:
+            raise ValueError(f"pad_state cannot shrink ({n} -> {new_cap})")
+        extra = new_cap - n
+        tail = lambda a: [(0, 0)] * (a.ndim - 2)
+        pad_slot = lambda a: jnp.pad(a, [(0, 0), (0, extra)] + tail(a))
+        return JitState(
+            tokens=jnp.pad(state.tokens, (0, extra)),
+            positions=jnp.pad(state.positions, (0, extra),
+                              constant_values=pos_fill),
+            valid=jnp.pad(state.valid, (0, extra)),
+            n_real=state.n_real,
+            x=pad_slot(state.x), q=pad_slot(state.q), k=pad_slot(state.k),
+            v=pad_slot(state.v), vc=pad_slot(state.vc), T=pad_slot(state.T),
+            codes=pad_slot(state.codes),
+        )
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def gather_slots(self, state: JitState, order: jax.Array) -> JitState:
+        """Permute the slot axis of every leaf by ``order`` ([n_cap] int32,
+        a permutation) — the device-side slot rearrangement primitive
+        (defrag compaction: valid slots to the front in sequence order, free
+        slots to the tail). One fused gather, no host mirror round-trip.
+        ``n_real`` is order-invariant. Position ids still name the OLD
+        layout's embeddings, so a defrag follows this with the re-spread +
+        ``full_forward`` (see ``BatchServer._defrag``)."""
+        return JitState(
+            tokens=state.tokens[order],
+            positions=state.positions[order],
+            valid=state.valid[order],
+            n_real=state.n_real,
+            x=jnp.take(state.x, order, axis=1),
+            q=jnp.take(state.q, order, axis=1),
+            k=jnp.take(state.k, order, axis=1),
+            v=jnp.take(state.v, order, axis=1),
+            vc=jnp.take(state.vc, order, axis=1),
+            T=jnp.take(state.T, order, axis=1),
+            codes=jnp.take(state.codes, order, axis=1),
+        )
 
     # ------------------------------------------------------------ kv export
 

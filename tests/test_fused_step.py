@@ -1,0 +1,383 @@
+"""The fused ragged hot path (ISSUE 7): one-launch edit step + device-side
+state surgery.
+
+Three rungs of the differential ladder:
+
+* **kernel** — ``fused_patch_assign`` vs the unfused reference chain
+  (``incr_patch_ref`` + inline requantize) on odd/non-pow2 shapes,
+  all-masked rows and documents, batched grids, and under the engine's
+  jit(vmap(...)) route;
+* **engine** — ``use_fused_kernel=True`` vs the inline-einsum engine:
+  identical codes, float-close activations, identical overflow flags, on
+  mixed typed buckets including merged-bucket ragged documents (same
+  ``n_cap``, very different ``n_real``);
+* **server** — device-side grow (``pad_state``) and defrag
+  (``gather_slots`` + re-spread + the SAME ``full_forward``) vs the host
+  re-ingest slow paths: defrag is BITWISE-equal by construction, grow is
+  history-preserving (token-exact streams, close logits), and the
+  failed-dispatch rollback ladder still holds with the device paths on.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.vq_opt_125m import smoke_config
+from repro.kernels.fused_step import (
+    fused_patch_assign, fused_patch_assign_batched, fused_patch_assign_ref,
+)
+from repro.models import transformer as T
+from repro.serving.batch_server import BatchServer, _device_copy
+from repro.serving.jit_engine import JitIncrementalEngine
+
+
+def _inputs(n, H, dh, C, Q, hq, seed=0, mask_p=0.6, batch=None):
+    shape = (lambda *s: ((batch,) + s) if batch else s)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 8)
+    q = jax.random.normal(ks[0], shape(n, H, dh))
+    k_new = jax.random.normal(ks[1], shape(H, C, dh))
+    k_old = jax.random.normal(ks[2], shape(H, C, dh))
+    vc_new = jax.random.normal(ks[3], shape(H, C, Q))
+    vc_old = jax.random.normal(ks[4], shape(H, C, Q))
+    mask = jax.random.bernoulli(ks[5], mask_p, shape(n, C)).astype(jnp.float32)
+    T_base = jax.random.normal(ks[6], shape(n, H, Q))
+    counts = jnp.maximum(
+        jax.random.randint(ks[7], shape(n), 1, n + 1), 1).astype(jnp.float32)
+    vq_bias = jax.random.normal(ks[0], (hq, Q))  # shared across the batch
+    return q, k_new, k_old, vc_new, vc_old, mask, T_base, counts, vq_bias
+
+
+# ------------------------------------------------------------------ kernel
+
+
+@pytest.mark.parametrize(
+    "n,H,dh,C,Q,hq,block_r",
+    [
+        (64, 4, 64, 8, 64, 2, 32),     # pow2 everything
+        (13, 4, 8, 5, 16, 2, 8),       # odd rows/columns, tiny dims
+        (100, 6, 16, 7, 48, 3, 128),   # non-pow2, block_r > n (one block)
+        (7, 2, 4, 3, 8, 1, 4),         # hq=1 (every head in one vq group)
+    ],
+)
+def test_fused_kernel_matches_ref(n, H, dh, C, Q, hq, block_r):
+    args = _inputs(n, H, dh, C, Q, hq, seed=n + C)
+    T_all, codes = fused_patch_assign(*args, heads_per_vq=H // hq,
+                                      block_r=block_r)
+    T_ref, codes_ref = fused_patch_assign_ref(*args)
+    assert T_all.shape == (n, H, Q) and codes.shape == (n, hq)
+    np.testing.assert_allclose(np.asarray(T_all), np.asarray(T_ref),
+                               atol=2e-5, rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(codes), np.asarray(codes_ref))
+
+
+def test_fused_kernel_all_masked_rows_keep_T_base():
+    """A fully-masked row receives an exactly-zero patch: its T output is
+    bitwise T_base and its code is the plain requantize of T_base — the
+    contract that lets the engine exclude dirty rows (and free slots)
+    through the mask alone."""
+    n, H, dh, C, Q, hq = 11, 4, 8, 4, 16, 2
+    args = list(_inputs(n, H, dh, C, Q, hq, seed=3))
+    mask = np.array(args[5], copy=True)
+    mask[2] = 0.0
+    mask[7] = 0.0
+    args[5] = jnp.asarray(mask)
+    T_all, codes = fused_patch_assign(*args, heads_per_vq=H // hq, block_r=8)
+    T_ref, codes_ref = fused_patch_assign_ref(*args)
+    for r in (2, 7):
+        np.testing.assert_array_equal(np.asarray(T_all[r]),
+                                      np.asarray(args[6][r], np.float32))
+    np.testing.assert_array_equal(np.asarray(codes), np.asarray(codes_ref))
+
+
+@pytest.mark.parametrize("B,n,H,dh,C,Q,hq", [(2, 64, 4, 16, 8, 32, 2),
+                                             (3, 9, 2, 8, 3, 16, 1)])
+def test_fused_kernel_batched_matches_per_doc(B, n, H, dh, C, Q, hq):
+    args = _inputs(n, H, dh, C, Q, hq, seed=B * n, batch=B)
+    T_all, codes = fused_patch_assign_batched(*args, heads_per_vq=H // hq,
+                                              block_r=8)
+    assert T_all.shape == (B, n, H, Q) and codes.shape == (B, n, hq)
+    for b in range(B):
+        per = [a[b] for a in args[:-1]] + [args[-1]]  # vq_bias is shared
+        T_b, codes_b = fused_patch_assign(*per, heads_per_vq=H // hq,
+                                          block_r=8)
+        np.testing.assert_allclose(np.asarray(T_all[b]), np.asarray(T_b),
+                                   atol=1e-5, rtol=1e-5)
+        np.testing.assert_array_equal(np.asarray(codes[b]),
+                                      np.asarray(codes_b))
+
+
+def test_fused_kernel_all_masked_document_in_batch():
+    """A document whose whole mask is zero (a filler row in a padded
+    dispatch) must keep T_base everywhere — no cross-document leakage
+    through the batched grid."""
+    B, n, H, dh, C, Q, hq = 3, 8, 2, 8, 4, 16, 2
+    args = list(_inputs(n, H, dh, C, Q, hq, seed=9, batch=B))
+    mask = np.array(args[5], copy=True)
+    mask[1] = 0.0
+    args[5] = jnp.asarray(mask)
+    T_all, _ = fused_patch_assign_batched(*args, heads_per_vq=H // hq,
+                                          block_r=8)
+    np.testing.assert_array_equal(np.asarray(T_all[1]),
+                                  np.asarray(args[6][1], np.float32))
+
+
+def test_fused_kernel_vmap_matches_batched():
+    """jit(vmap(unbatched)) — the engine's route into the batched grid via
+    the pallas batching rule — equals the hand-written batched entry."""
+    B, n, H, dh, C, Q, hq = 2, 16, 4, 8, 4, 16, 2
+    args = _inputs(n, H, dh, C, Q, hq, seed=4, batch=B)
+
+    def one(q, kn, ko, vn, vo, m, tb, c):
+        return fused_patch_assign(q, kn, ko, vn, vo, m, tb, c, args[-1],
+                                  heads_per_vq=H // hq, block_r=8)
+
+    T_v, codes_v = jax.jit(jax.vmap(one))(*args[:-1])
+    T_b, codes_b = fused_patch_assign_batched(*args, heads_per_vq=H // hq,
+                                              block_r=8)
+    np.testing.assert_allclose(np.asarray(T_v), np.asarray(T_b),
+                               atol=1e-6, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(codes_v), np.asarray(codes_b))
+
+
+# ------------------------------------------------------------------ engine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_config(vqt=True)
+    params = T.init_params(jax.random.PRNGKey(1), cfg)
+    fused = JitIncrementalEngine(params, cfg, edit_capacity=4,
+                                 row_capacity=16, use_fused_kernel=True)
+    inline = JitIncrementalEngine({}, cfg, edit_capacity=4, row_capacity=16,
+                                  use_fused_kernel=False,
+                                  _weights=fused.weights)
+    return cfg, params, fused, inline
+
+
+def _assert_states_close(a, b, atol=3e-4):
+    np.testing.assert_array_equal(np.asarray(a.tokens), np.asarray(b.tokens))
+    np.testing.assert_array_equal(np.asarray(a.valid), np.asarray(b.valid))
+    np.testing.assert_array_equal(np.asarray(a.codes), np.asarray(b.codes))
+    np.testing.assert_allclose(np.asarray(a.x), np.asarray(b.x), atol=atol)
+    np.testing.assert_allclose(np.asarray(a.T), np.asarray(b.T), atol=atol)
+
+
+def test_engine_fused_matches_inline_mixed_bucket(setup):
+    """One typed bucket of each kind on a ragged document (invalid tail +
+    interior hole): fused and inline engines agree — codes exactly,
+    activations float-close, overflow bit-for-bit."""
+    cfg, params, fused, inline = setup
+    rng = np.random.default_rng(0)
+    n, n_cap = 20, 24
+    tokens = np.zeros(n_cap, np.int32)
+    tokens[:n] = rng.integers(0, cfg.vocab, n)
+    valid = np.zeros(n_cap, bool)
+    valid[:n] = True
+    valid[5] = False  # interior hole (deleted slot)
+    positions = np.full(n_cap, cfg.pos_pool - 1, np.int32)
+    positions[:n] = np.arange(n) * 7
+    sf = fused.full_forward(jnp.asarray(tokens), jnp.asarray(positions),
+                            jnp.asarray(valid))
+    si = inline.full_forward(jnp.asarray(tokens), jnp.asarray(positions),
+                             jnp.asarray(valid))
+    _assert_states_close(sf, si)
+    from repro.serving.jit_engine import OP_DELETE, OP_INSERT, OP_REPLACE
+
+    slot = jnp.asarray([3, 8, 21, -1], jnp.int32)   # 21 = free-slot insert
+    tok = jnp.asarray([7, 0, 11, 0], jnp.int32)
+    pos = jnp.asarray([positions[3], 0, 40, 0], jnp.int32)
+    op = jnp.asarray([OP_REPLACE, OP_DELETE, OP_INSERT, 0], jnp.int32)
+    nf, of = fused.apply_edits(sf, slot, tok, pos, op)
+    ni, oi = inline.apply_edits(si, slot, tok, pos, op)
+    assert bool(of) == bool(oi)
+    _assert_states_close(nf, ni)
+
+
+def test_engine_fused_matches_inline_merged_bucket_ragged(setup):
+    """Two documents sharing one capacity class with very different real
+    lengths (the ragged merged-bucket case): the batched fused step matches
+    the batched inline step slice-for-slice."""
+    cfg, params, fused, inline = setup
+    from repro.serving.batch_engine import BatchedJitEngine, unstack_state
+
+    bf = BatchedJitEngine({}, cfg, edit_capacity=4, row_capacity=16,
+                          use_fused_kernel=True, _weights=fused.weights)
+    bi = BatchedJitEngine({}, cfg, edit_capacity=4, row_capacity=16,
+                          use_fused_kernel=False, _weights=fused.weights)
+    rng = np.random.default_rng(1)
+    n_cap, n_reals = 32, (29, 4)  # same class, very different occupancy
+    tokens = np.zeros((2, n_cap), np.int32)
+    valid = np.zeros((2, n_cap), bool)
+    positions = np.full((2, n_cap), cfg.pos_pool - 1, np.int32)
+    for b, nr in enumerate(n_reals):
+        tokens[b, :nr] = rng.integers(0, cfg.vocab, nr)
+        valid[b, :nr] = True
+        positions[b, :nr] = np.arange(nr) * 5
+    sf = bf.batch_full_forward(jnp.asarray(tokens), jnp.asarray(positions),
+                               jnp.asarray(valid))
+    si = bi.batch_full_forward(jnp.asarray(tokens), jnp.asarray(positions),
+                               jnp.asarray(valid))
+    slot = jnp.asarray([[2, 28, -1, -1], [1, -1, -1, -1]], jnp.int32)
+    tok = jnp.asarray([[9, 4, 0, 0], [3, 0, 0, 0]], jnp.int32)
+    nf, of = bf.batch_apply_replaces(sf, slot, tok)
+    ni, oi = bi.batch_apply_replaces(si, slot, tok)
+    np.testing.assert_array_equal(np.asarray(of), np.asarray(oi))
+    for b in range(2):
+        _assert_states_close(unstack_state(nf, b), unstack_state(ni, b))
+
+
+# ------------------------------------------------------------------ server
+
+
+def _mk_server(cfg, params, **kw):
+    base = dict(edit_capacity=4, row_capacity=16, max_batch=2,
+                min_doc_capacity=8, pos_pool=256)
+    base.update(kw)
+    return BatchServer(params, cfg, **base)
+
+
+def _drive(srv, n_edits, seed=3, insert_p=0.7):
+    """Insert-heavy stream; inserts cluster at the front so the SAME
+    position-id gap keeps splitting — deterministic defrag pressure."""
+    rng = np.random.default_rng(seed)
+    for _ in range(n_edits):
+        did = sorted(srv.docs)[int(rng.integers(len(srv.docs)))]
+        n = srv.docs[did].n_virtual
+        if rng.random() < insert_p:
+            srv.submit_insert(did, int(rng.integers(min(n + 1, 2))),
+                              int(rng.integers(1, srv.cfg.vocab)))
+        elif n > 2:
+            srv.submit_delete(did, int(rng.integers(n)))
+        srv.flush()
+
+
+@pytest.fixture(scope="module")
+def server_setup():
+    cfg = smoke_config(vqt=True)
+    params = jax.device_get(T.init_params(jax.random.PRNGKey(1), cfg))
+    return cfg, params
+
+
+def test_device_defrag_bitwise_vs_reingest_oracle(server_setup):
+    """Device defrag (gather_slots + host re-spread + full_forward) must be
+    BITWISE-equal to re-ingesting from identically-compacted host mirrors:
+    both feed the same compiled function the same values, so this holds by
+    construction — and this test keeps it held."""
+    cfg, params = server_setup
+    srv = _mk_server(cfg, params)
+    rng = np.random.default_rng(2)
+    srv.open_documents({"a": list(rng.integers(1, cfg.vocab, 6))})
+    _drive(srv, 20, seed=5)
+    doc = srv.docs["a"]
+    srv._defrag(doc)  # force one more device defrag right now
+    assert srv.stats.device_defrags >= 1
+    dev = srv.store.ensure_hot(doc)
+    eng = srv.engine(srv.C, srv.R)
+    oracle = eng.full_forward(_device_copy(doc.tokens),
+                              _device_copy(doc.positions),
+                              _device_copy(doc.valid))
+    for a, b in zip(jax.tree.leaves(dev), jax.tree.leaves(oracle)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # and the compacted mirrors are self-consistent: slots are the identity
+    assert doc.slots == list(range(doc.n))
+    assert doc.touched_from is None
+
+
+def test_device_paths_match_host_reingest_stream(server_setup):
+    """End-to-end: an insert-heavy stream that grows AND defrags, served by
+    the device paths vs the legacy host re-ingest paths — token-exact
+    documents and close logits, with the device counters proving the fast
+    paths actually ran."""
+    cfg, params = server_setup
+    docs = {"a": [5, 9, 2, 7, 1, 3], "b": [4, 4, 8, 1, 2, 6]}
+    dev = _mk_server(cfg, params)
+    host = _mk_server(cfg, params, use_fused_kernel=False,
+                      capacity_class_step=2, device_grow=False,
+                      device_defrag=False)
+    for srv in (dev, host):
+        srv.open_documents({k: list(v) for k, v in docs.items()})
+        _drive(srv, 28, seed=7)
+    assert dev.stats.device_grows >= 1
+    assert dev.stats.device_defrags >= 1
+    assert host.stats.device_grows == host.stats.device_defrags == 0
+    for did in docs:
+        np.testing.assert_array_equal(dev.tokens(did), host.tokens(did))
+        np.testing.assert_allclose(np.asarray(dev.logits(did)),
+                                   np.asarray(host.logits(did)), atol=3e-4)
+
+
+def test_device_grow_is_pure_padding(server_setup):
+    """Device grow appends invalid zero slots and NOTHING else: original
+    rows are bitwise-untouched (incremental attention history survives, so
+    ``touched_from`` must survive too)."""
+    cfg, params = server_setup
+    srv = _mk_server(cfg, params)
+    rng = np.random.default_rng(4)
+    srv.open_documents({"a": list(rng.integers(1, cfg.vocab, 8))})
+    doc = srv.docs["a"]
+    before = jax.tree.map(np.asarray, srv.store.ensure_hot(doc))
+    old_cap = doc.n_cap
+    doc.free.clear()  # force the next insert to grow
+    srv.submit_insert("a", 0, 3)
+    srv.flush()
+    assert doc.n_cap == srv.padded_cap(old_cap + 1) > old_cap
+    assert srv.stats.device_grows == 1 and srv.stats.full_forwards == 1
+    # the state now reflects the insert; undo nothing — instead check the
+    # pad itself via the engine primitive on the pre-grow snapshot
+    eng = srv.engine(srv.C, srv.R)
+    from repro.serving.jit_engine import JitState
+
+    padded = eng.pad_state(JitState(*(jnp.asarray(l) for l in before)),
+                           doc.n_cap, pos_fill=srv._pos_sentinel)
+    for name, leaf in zip(JitState._fields, padded):
+        arr = np.asarray(leaf)
+        ref = getattr(before, name)
+        if arr.ndim == 0:
+            assert arr == ref
+            continue
+        slot_axis = 0 if arr.ndim == 1 else 1
+        np.testing.assert_array_equal(
+            np.take(arr, np.arange(old_cap), axis=slot_axis), ref, err_msg=name)
+        tail = np.take(arr, np.arange(old_cap, doc.n_cap), axis=slot_axis)
+        if name == "positions":
+            assert (tail == srv._pos_sentinel).all()
+        else:
+            assert not tail.any(), name
+
+
+def test_failed_dispatch_after_device_grow_rolls_back(server_setup):
+    """The rollback ladder with the device paths ON: a take whose grow ran
+    the device pad, followed by an injected dispatch failure, restores the
+    pre-take mirrors and re-adopts the pre-take device state (epoch case 2)
+    — then the retry converges to the never-failed server's exact tokens
+    and logits."""
+    cfg, params = server_setup
+    toks = [3, 1, 4, 1, 5, 9, 2, 6]  # fills min capacity: insert => grow
+
+    oracle = _mk_server(cfg, params)
+    oracle.open_document("d", list(toks))
+    oracle.submit_insert("d", 0, 7)
+    oracle.flush()
+
+    srv = _mk_server(cfg, params)
+    srv.open_document("d", list(toks))
+    pre_cap = srv.docs["d"].n_cap
+    srv.submit_insert("d", 0, 7)
+    eng = srv.engine(srv.C, srv.docs["d"].row_capacity)
+    orig = eng.batch_apply_inserts
+    eng.batch_apply_inserts = lambda *a, **k: (_ for _ in ()).throw(
+        RuntimeError("injected dispatch failure"))
+    try:
+        with pytest.raises(RuntimeError, match="injected"):
+            srv.step()
+    finally:
+        eng.batch_apply_inserts = orig
+    doc = srv.docs["d"]
+    assert doc.n_cap == pre_cap  # the grow rolled back with the mirrors
+    assert list(doc.pending) == [("insert", 0, 7)]
+    np.testing.assert_array_equal(doc.seq_tokens(), toks)
+    srv.flush()  # retry: grows again (device pad) and applies the edit
+    assert srv.stats.device_grows >= 1
+    np.testing.assert_array_equal(srv.tokens("d"), oracle.tokens("d"))
+    np.testing.assert_allclose(np.asarray(srv.logits("d")),
+                               np.asarray(oracle.logits("d")), atol=3e-4)

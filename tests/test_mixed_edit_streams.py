@@ -221,8 +221,8 @@ def test_server_gap_exhaustion_defrags_and_recovers(setup):
 
 
 def test_server_capacity_grow_on_full_buffer(setup):
-    """Inserting past n_cap doubles the slot buffer (re-ingest at the new
-    shape) without losing exactness."""
+    """Inserting past n_cap steps the slot buffer up to the next capacity
+    class (on-device pad, no re-ingest) without losing exactness."""
     cfg, params, jeng, neng = setup
     srv = BatchServer(params, cfg, edit_capacity=4, row_capacity=16,
                       max_batch=2, min_doc_capacity=8, pos_pool=2048)
@@ -238,7 +238,8 @@ def test_server_capacity_grow_on_full_buffer(setup):
     srv.flush()
     doc = srv.docs["d"]
     assert srv.stats.grows >= 1
-    assert doc.n_cap == 16 and doc.n == 13
+    assert srv.stats.device_grows >= 1
+    assert doc.n_cap == srv.padded_cap(9) and doc.n == 13
     assert list(srv.tokens("d")) == r
     ns = neng.full_forward(doc.seq_tokens(), doc.seq_positions())
     _assert_seq_parity(doc.state, doc.slots, ns, neng)
@@ -261,3 +262,53 @@ def test_server_edit_script_round_trip(setup):
         srv.submit_edit("d", e)
     srv.flush()
     assert list(srv.tokens("d")) == apply_edits(base, script) == list(new)
+
+
+def test_server_long_mixed_stream_compiled_shape_budget(setup):
+    """ISSUE 7 satellite: a LONG mixed stream (structural-heavy, crossing a
+    capacity-class boundary) must stay within a fixed compiled-shape
+    budget, and the per-edit launch rate must stay O(1) — the ragged
+    capacity classes + device-side grow keep the shape lattice bounded by
+    the class grid, never by traffic volume."""
+    cfg, params, jeng, neng = setup
+    srv = BatchServer(params, cfg, edit_capacity=4, row_capacity=16,
+                      max_batch=2, min_doc_capacity=8, pos_pool=2048)
+    rng = np.random.default_rng(11)
+    ref = {f"d{i}": list(rng.integers(0, cfg.vocab, 6)) for i in range(2)}
+    srv.open_documents({k: list(v) for k, v in ref.items()})
+    n_ops = 96
+    for _ in range(n_ops):
+        did = f"d{int(rng.integers(2))}"
+        r = ref[did]
+        kind = rng.choice(["replace", "insert", "delete"], p=[0.4, 0.4, 0.2])
+        if kind == "insert":
+            p = int(rng.integers(len(r) + 1))
+            t = int(rng.integers(cfg.vocab))
+            srv.submit_insert(did, p, t)
+            r.insert(p, t)
+        elif kind == "delete" and len(r) > 1:
+            p = int(rng.integers(len(r)))
+            srv.submit_delete(did, p)
+            del r[p]
+        else:
+            p = int(rng.integers(len(r)))
+            t = int(rng.integers(cfg.vocab))
+            srv.submit_replace(did, p, t)
+            r[p] = t
+        if rng.random() < 0.5:
+            srv.step()
+    srv.flush()
+    assert srv.stats.grows >= 1  # the stream DID cross a class boundary
+    # the budget: ingest shapes + one edit shape per visited (class, B pad)
+    # + one pad shape per class transition + overflow/defrag full shapes.
+    # 2 classes x {full, edit, pad} at <= 2 batch pads is well under 12 —
+    # and crucially INDEPENDENT of n_ops (96 edits here, was 8 shapes at
+    # 24 edits in dev runs)
+    assert srv.stats.traced_shapes <= 12
+    assert srv.stats.traced_shapes == srv.stats.rejits  # alias stays true
+    assert srv.stats.kernel_launches_per_edit <= 3.0
+    for did, r in ref.items():
+        assert list(srv.tokens(did)) == r, did
+        doc = srv.docs[did]
+        ns = neng.full_forward(doc.seq_tokens(), doc.seq_positions())
+        _assert_seq_parity(doc.state, doc.slots, ns, neng)

@@ -129,7 +129,7 @@ def test_stats_reconcile(setup, tmp_path):
     eng = srv.engine(srv.C, srv.R)
     assert srv.stats.grows >= 1
     assert srv.store.nbytes("d2") == state_nbytes_for(
-        2 * N_CAP, eng.L, eng.meta) > before
+        srv.docs["d2"].n_cap, eng.L, eng.meta) > before
     _reconcile(srv)
     srv.close_document("d0")
     srv.close_document("d1")
