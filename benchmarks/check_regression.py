@@ -145,6 +145,26 @@ GATES = {
             "batch_dispatches": {"higher_is_better": False, "abs_tol": 2},
         },
     },
+    # ISSUE 9: the sigma-delta Pareto curve. Everything here is a
+    # deterministic function of the seeded trace (transmitted-row counts,
+    # bitwise booleans, drift vs a from-scratch oracle) — no wall-clock.
+    # The gate holds the curve's SHAPE: threshold 0 stays bitwise-exact,
+    # ops stay monotone nonincreasing in threshold, drift stays under the
+    # documented bound (delta_pareto.DRIFT_BOUND), and the max-threshold
+    # leg keeps saving its baseline fraction of transmissions.
+    "delta_pareto": {
+        "bench": "BENCH_delta_pareto.json",
+        "baseline": "BASELINE_delta_pareto.json",
+        "key": "workload",
+        "identity": ("doc_len", "n_edits", "thresholds"),
+        "metrics": {
+            "threshold0_bitwise": {"must_equal": True},
+            "ops_monotone_nonincreasing": {"must_equal": True},
+            "drift_within_bound": {"must_equal": True},
+            "ops_saved_frac_max_threshold": {
+                "higher_is_better": True, "abs_tol": 0.05},
+        },
+    },
     # ISSUE 5: tiered-store churn under a zipf stream. Counters are
     # deterministic under the seeded stream; rehydrate/full-forward
     # latencies are wall-clock and never gated.

@@ -1,0 +1,207 @@
+"""Sigma-delta Pareto sweep: ops saved vs logits drift per threshold
+(ISSUE 9 tentpole, DESIGN.md §10).
+
+The tolerance knob's whole pitch is a Pareto curve: raising
+``delta_threshold`` suppresses more sub-threshold propagation (fewer
+transmitted rows = fewer downstream ops) at the price of bounded logits
+drift. This benchmark MEASURES that curve, deterministically, so CI can
+gate its shape:
+
+* **ops** — transmitted (layer, row) pairs: after every flush the device
+  states ``x[1:]`` are diffed bitwise against the pre-flush snapshot and
+  changed rows counted. A structural step (grow / defrag / overflow
+  fallback — anything that re-runs ``full_forward``) is charged the full
+  ``n_layers * n_valid`` recompute, so thresholds can't cheat by pushing
+  work into fallbacks;
+* **drift** — max |logits - oracle| on the final document, where the
+  oracle is a from-scratch ``full_forward`` on the final host mirrors: the
+  exact transformer answer, independent of any incremental history;
+* **threshold-0 leg** — replayed against a DEFAULT-constructed server:
+  tokens and logits must be BITWISE-equal (the documented exactness
+  contract: threshold 0 is the exact engine, not merely close to it).
+
+No wall-clock anywhere — every metric is a deterministic function of the
+seeded trace, so the regression gate (``check_regression``) holds the
+curve itself: ops monotonically nonincreasing in threshold, drift within
+``DRIFT_BOUND``, and the max-threshold leg saving at least its baseline
+fraction of transmissions.
+
+Workloads reuse the suggestion benchmark's cursor models (typing /
+editing / uniform) so the curve is read at three edit localities.
+
+Emits ``results/BENCH_delta_pareto.json`` — one record per workload —
+plus name,value CSV lines like the other benchmarks.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import ensure_results
+from benchmarks.suggest_reuse import _edit_pos
+
+# The swept thresholds. 0.0 is the exactness anchor; the rest straddle the
+# smoke config's typical per-row L-inf deltas (~1-6 under random-init
+# weights) so every workload shows a real knee; the largest leg sits above
+# almost every delta, approaching the pure sigma-delta limit.
+THRESHOLDS = (0.0, 1.0, 3.0, 8.0)
+
+# Documented drift ceiling for the swept thresholds on the smoke config
+# (DESIGN.md §10): benchmark-calibrated, NOT a theoretical bound — the
+# gate exists to catch the bound quietly growing, not to prove it tight.
+# Measured max over the three workloads is ~0.99; 2.0 leaves 2x headroom.
+DRIFT_BOUND = 2.0
+
+
+def _make_trace(rng, ref: list, vocab: int, workload: str,
+                n_edits: int) -> list:
+    """Deterministic single-token edit trace [(op, pos, tok)] against a
+    live reference list, positions drawn by the workload's cursor model."""
+    trace = []
+    cursor = len(ref) // 2
+    for _ in range(n_edits):
+        u = rng.random()
+        op = "insert" if u < 0.4 else ("replace" if u < 0.8 else "delete")
+        if op == "delete" and len(ref) <= 2:
+            op = "replace"
+        pos = _edit_pos(rng, op, len(ref), cursor, workload)
+        cursor = min(pos, len(ref) - 1)
+        tok = int(rng.integers(1, vocab))
+        if op == "replace":
+            ref[pos] = tok
+        elif op == "insert":
+            ref.insert(pos, tok)
+        else:
+            del ref[pos]
+        trace.append((op, pos, tok))
+    return trace
+
+
+def _snap_x(srv, doc_id):
+    """Host copies of the resident x[1:] leaves (the transmitted state)."""
+    import jax
+
+    state = srv.store.ensure_hot(srv.docs[doc_id])
+    return np.asarray(jax.device_get(state.x))[1:], int(
+        np.sum(np.asarray(state.valid)))
+
+
+def _replay(params, cfg, trace, base_tokens, *, n_layers: int,
+            server_kw=None):
+    """Drive one server through the trace, metering transmitted rows.
+    Returns (server, ops_transmitted)."""
+    from repro.core.edits import Edit
+    from repro.serving.batch_server import BatchServer
+
+    srv = BatchServer(params, cfg, edit_capacity=4, row_capacity=32,
+                      max_batch=2, min_doc_capacity=32,
+                      **(server_kw or {}))
+    srv.open_document("d", list(base_tokens))
+    ops = 0
+    for op, pos, tok in trace:
+        before, _ = _snap_x(srv, "d")
+        ff0 = srv.stats.full_forwards
+        srv.submit_edit("d", Edit(op, pos, tok))
+        srv.flush()
+        after, n_valid = _snap_x(srv, "d")
+        if srv.stats.full_forwards != ff0 or before.shape != after.shape:
+            # structural step: charge the full recompute, not the diff
+            ops += n_layers * n_valid
+        else:
+            ops += int(np.sum(np.any(before != after, axis=-1)))
+    return srv, ops
+
+
+def run(doc_len: int = 96, n_edits: int = 24, seed: int = 0,
+        thresholds=THRESHOLDS) -> list[dict]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.vq_opt_125m import smoke_config
+    from repro.models import transformer as T
+    from repro.serving.jit_engine import JitIncrementalEngine
+
+    cfg = smoke_config(vqt=True)
+    params = jax.device_get(T.init_params(jax.random.PRNGKey(seed), cfg))
+    oracle_eng = JitIncrementalEngine(params, cfg, edit_capacity=4,
+                                      row_capacity=32)
+    n_layers = cfg.n_layers
+    records = []
+    for workload in ("typing", "editing", "uniform"):
+        rng = np.random.default_rng(seed)
+        base = list(rng.integers(0, cfg.vocab, doc_len))
+        ref = list(base)
+        trace = _make_trace(rng, ref, cfg.vocab, workload, n_edits)
+
+        # oracle logits on the FINAL document: from-scratch full forward
+        # over the threshold-0 leg's final host mirrors (token-exactness
+        # of every leg is asserted against `ref` below, so all legs share
+        # this oracle)
+        ops_by_thr, drift_by_thr = [], []
+        t0_tokens = t0_logits = None
+        for thr in thresholds:
+            srv, ops = _replay(params, cfg, trace, base, n_layers=n_layers,
+                               server_kw={"delta_threshold": thr})
+            assert list(srv.tokens("d")) == ref, (workload, thr)
+            doc = srv.docs["d"]
+            ostate = oracle_eng.full_forward(
+                jnp.asarray(np.array(doc.tokens, copy=True)),
+                jnp.asarray(np.array(doc.positions, copy=True)),
+                jnp.asarray(np.array(doc.valid, copy=True)))
+            order = np.argsort(np.asarray(ostate.positions)[
+                np.asarray(ostate.valid)])
+            last = int(np.flatnonzero(np.asarray(ostate.valid))[order][-1])
+            oracle_logits = np.asarray(
+                oracle_eng.logits_at(ostate, jnp.asarray(last, jnp.int32)))
+            logits = np.asarray(srv.logits("d"))
+            drift = float(np.max(np.abs(logits - oracle_logits)))
+            ops_by_thr.append(int(ops))
+            drift_by_thr.append(round(drift, 5))
+            if thr == 0.0:
+                t0_tokens = np.asarray(srv.tokens("d"))
+                t0_logits = logits
+
+        # exactness anchor: the threshold-0 leg replayed on a DEFAULT
+        # server must match bitwise — tokens AND logits
+        dsrv, _ = _replay(params, cfg, trace, base, n_layers=n_layers)
+        threshold0_bitwise = bool(
+            np.array_equal(t0_tokens, np.asarray(dsrv.tokens("d")))
+            and np.array_equal(t0_logits, np.asarray(dsrv.logits("d"))))
+
+        monotone = all(a >= b for a, b in zip(ops_by_thr, ops_by_thr[1:]))
+        max_drift = max(drift_by_thr)
+        saved = 1.0 - ops_by_thr[-1] / max(ops_by_thr[0], 1)
+        rec = {
+            "workload": workload,
+            "doc_len": doc_len,
+            "n_edits": n_edits,
+            "thresholds": list(thresholds),
+            "ops_transmitted": ops_by_thr,
+            "logits_drift": drift_by_thr,
+            "threshold0_bitwise": threshold0_bitwise,
+            "ops_monotone_nonincreasing": monotone,
+            "max_drift": round(max_drift, 5),
+            "drift_within_bound": bool(max_drift <= DRIFT_BOUND),
+            "ops_saved_frac_max_threshold": round(saved, 4),
+        }
+        records.append(rec)
+        print(f"delta_pareto,{workload},ops={ops_by_thr},"
+              f"drift={drift_by_thr},saved_frac={rec['ops_saved_frac_max_threshold']},"
+              f"bitwise0={threshold0_bitwise}")
+    out = os.path.join(ensure_results(), "BENCH_delta_pareto.json")
+    with open(out, "w") as f:
+        json.dump(records, f, indent=2)
+    print(f"wrote {out}")
+    return records
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--doc-len", type=int, default=96)
+    ap.add_argument("--n-edits", type=int, default=24)
+    args = ap.parse_args()
+    run(doc_len=args.doc_len, n_edits=args.n_edits)

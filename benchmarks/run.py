@@ -27,6 +27,39 @@ def _write_summary(summary: list) -> str:
     return out
 
 
+# every BENCH_*.json a registered benchmark emits. An orphan (present on
+# disk but absent here) is a benchmark that was deleted or renamed without
+# cleaning up — or a stray local emission — and would silently rot next to
+# the gated files, so the aggregator fails loudly instead.
+EXPECTED_BENCH = {
+    "BENCH_edit_mix.json",
+    "BENCH_hot_path.json",
+    "BENCH_suggest_reuse.json",
+    "BENCH_async_load.json",
+    "BENCH_sharded_serving.json",
+    "BENCH_state_churn.json",
+    "BENCH_delta_pareto.json",
+}
+
+
+def check_orphan_bench(results_dir: str | None = None) -> list[str]:
+    """Return (and print) the list of orphan BENCH_*.json files."""
+    import glob
+
+    from benchmarks.common import ensure_results
+
+    results_dir = results_dir or ensure_results()
+    orphans = sorted(
+        os.path.basename(p)
+        for p in glob.glob(os.path.join(results_dir, "BENCH_*.json"))
+        if os.path.basename(p) not in EXPECTED_BENCH)
+    for o in orphans:
+        print(f"ORPHAN benchmark emission: results/{o} — not produced by "
+              "any registered benchmark; delete it or register it in "
+              "benchmarks.run.EXPECTED_BENCH")
+    return orphans
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale-ish protocol")
@@ -127,6 +160,14 @@ def main():
                            n_edits=64 if args.full else 32)
     summary.append({"benchmark": "state_churn", "rows": recs})
 
+    print(f"\n=== Sigma-delta Pareto: ops saved vs drift per threshold "
+          f"({time.time()-t0:.0f}s) ===")
+    from benchmarks import delta_pareto
+
+    recs = delta_pareto.run(doc_len=192 if args.full else 96,
+                            n_edits=48 if args.full else 24)
+    summary.append({"benchmark": "delta_pareto", "rows": recs})
+
     print(f"\n=== Async concurrent load: deadline batching + latency SLOs "
           f"({time.time()-t0:.0f}s) ===")
     from benchmarks import async_load
@@ -169,6 +210,11 @@ def main():
 
     out = _write_summary(summary)
     print(f"\nwrote {out} ({len(summary)} benchmark rows)")
+    orphans = check_orphan_bench()
+    if orphans:
+        raise SystemExit(
+            f"{len(orphans)} orphan BENCH_*.json file(s) in results/ — see "
+            "above")
     print(f"total {time.time()-t0:.0f}s")
 
 

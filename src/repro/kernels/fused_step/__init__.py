@@ -1,4 +1,4 @@
 from repro.kernels.fused_step.ops import (
-    fused_patch_assign, fused_patch_assign_batched,
+    delta_gate, fused_patch_assign, fused_patch_assign_batched,
 )
-from repro.kernels.fused_step.ref import fused_patch_assign_ref
+from repro.kernels.fused_step.ref import delta_gate_ref, fused_patch_assign_ref

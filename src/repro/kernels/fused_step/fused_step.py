@@ -32,6 +32,12 @@ Head-group blocking: stacked weights order attention heads as
 ``cb_per_head`` reshape), so blocking the head axis by ``heads_per_vq`` at
 block index ``hh`` hands each grid cell exactly the heads its vq head
 sums over.
+
+``delta_gate_kernel`` is the sigma-delta companion launch (DESIGN.md §10):
+a per-row L∞ reduce + threshold compare deciding which freshly recomputed
+rows propagate downstream. The resulting keep bits flow back into the
+NEXT layer's engine-built mask, so the thresholded gating mode costs one
+tiny extra launch per layer and zero changes to the fused patch body.
 """
 from __future__ import annotations
 
@@ -197,3 +203,51 @@ def fused_step_kernel_batched(
         interpret=interpret,
     )(q, k_new, k_old, vc_new, vc_old, mask, T_base, counts, vq_bias)
     return T_all[:, :n], codes[:, :n]
+
+
+def _gate_kernel(xn_ref, xo_ref, keep_ref, *, threshold: float):
+    # xn/xo: [BR, d]; keep: [BR, 1] int32 {0, 1}
+    diff = jnp.max(jnp.abs(xn_ref[...].astype(jnp.float32)
+                           - xo_ref[...].astype(jnp.float32)),
+                   axis=-1, keepdims=True)  # [BR, 1]
+    keep_ref[...] = (diff > threshold).astype(jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("threshold", "block_r", "interpret"))
+def delta_gate_kernel(
+    x_new: jax.Array,  # [r, d] freshly recomputed next-layer rows
+    x_old: jax.Array,  # [r, d] the rows' last-TRANSMITTED values
+    *,
+    threshold: float,
+    block_r: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Per-row sigma-delta gate: ``keep[i] = max_d |x_new[i] − x_old[i]| >
+    threshold`` (DESIGN.md §10). Returns ``keep [r] bool``.
+
+    ``threshold`` is a compile-time constant — engines carry one Python
+    float per instance, so the jit key matches the engine's identity key.
+    L∞ and the strict compare are order-insensitive (max is associative and
+    exact), so this kernel, its interpret-mode run and the inline jnp
+    expression all produce bitwise-identical keep bits."""
+    r, d = x_new.shape
+    pad = (-r) % block_r
+    if pad:
+        # padded rows diff zero-against-zero: 0 > threshold is False, and
+        # the slice below drops them anyway
+        x_new = jnp.pad(x_new, ((0, pad), (0, 0)))
+        x_old = jnp.pad(x_old, ((0, pad), (0, 0)))
+    Rp = r + pad
+    keep = pl.pallas_call(
+        functools.partial(_gate_kernel, threshold=float(threshold)),
+        grid=(Rp // block_r,),
+        in_specs=[
+            pl.BlockSpec((block_r, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Rp, 1), jnp.int32),
+        interpret=interpret,
+    )(x_new, x_old)
+    return keep[:r, 0].astype(bool)

@@ -59,3 +59,20 @@ def fused_patch_assign_batched(q, k_new, k_old, vc_new, vc_old, mask, T_base,
         counts, vq_bias, heads_per_vq=heads_per_vq, block_r=block_r,
         interpret=not _on_tpu(),
     )
+
+
+def delta_gate(x_new, x_old, threshold: float, *, block_r: int = 128):
+    """Sigma-delta propagation gate (DESIGN.md §10): per-row L∞ change
+    ``max_d |x_new − x_old|`` compared strictly against ``threshold``.
+    x_new/x_old: [r, d]; returns keep [r] bool — True means the row drifted
+    past the threshold from its last-transmitted value and must propagate.
+
+    The engine feeds the keep bits into the NEXT layer's folded mask (the
+    thresholded-gating mode of the fused step), so suppression costs one
+    small extra launch per layer and the fused patch body is unchanged.
+    Bitwise-equal to ``delta_gate_ref`` on every shape: max and > are
+    order-insensitive, unlike the ΔT accumulation."""
+    from repro.kernels.fused_step.fused_step import delta_gate_kernel
+
+    return delta_gate_kernel(x_new, x_old, threshold=float(threshold),
+                             block_r=block_r, interpret=not _on_tpu())

@@ -27,3 +27,13 @@ def fused_patch_assign_ref(q, k_new, k_old, vc_new, vc_old, mask, T_base,
     s = s / counts.astype(jnp.float32)[:, None, None] + vq_bias[None]
     codes = jnp.argmax(s, axis=-1).astype(jnp.int32)
     return T_all, codes
+
+
+def delta_gate_ref(x_new, x_old, threshold: float) -> jax.Array:
+    """NumPy/jnp oracle for ``delta_gate`` (DESIGN.md §10): keep a row iff
+    its L∞ change STRICTLY exceeds the threshold. Parity with the kernel is
+    bitwise — max/abs/> are order-insensitive — so the inline engine path
+    and the fused path share exact gating semantics."""
+    x_new = jnp.asarray(x_new, jnp.float32)
+    x_old = jnp.asarray(x_old, jnp.float32)
+    return jnp.max(jnp.abs(x_new - x_old), axis=-1) > threshold

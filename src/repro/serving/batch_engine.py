@@ -78,7 +78,9 @@ class BatchedJitEngine(JitIncrementalEngine):
 
     Same constructor as the single-document engine (``edit_capacity``,
     ``row_capacity``, ``use_patch_kernel``, ``use_fused_kernel``,
-    ``_weights``), plus ``mesh`` / ``batch_axis`` for data-parallel sharding
+    ``delta_threshold`` — the sigma-delta propagation gate of DESIGN.md §10,
+    applied per document slice — ``_weights``), plus ``mesh`` /
+    ``batch_axis`` for data-parallel sharding
     of the document axis. With ``use_fused_kernel=True`` each layer's patch
     + requantize runs as ONE batched ``fused_step`` Pallas launch (the
     batching rule turns the per-document kernel grid into a
@@ -87,13 +89,14 @@ class BatchedJitEngine(JitIncrementalEngine):
 
     def __init__(self, params, cfg, *, edit_capacity: int = 8,
                  row_capacity: int = 64, use_patch_kernel: bool = False,
-                 use_fused_kernel: bool = False,
+                 use_fused_kernel: bool = False, delta_threshold: float = 0.0,
                  mesh: Optional[Mesh] = None, batch_axis: str = "data",
                  _weights=None):
         super().__init__(params, cfg, edit_capacity=edit_capacity,
                          row_capacity=row_capacity,
                          use_patch_kernel=use_patch_kernel,
-                         use_fused_kernel=use_fused_kernel, _weights=_weights)
+                         use_fused_kernel=use_fused_kernel,
+                         delta_threshold=delta_threshold, _weights=_weights)
         if mesh is not None:
             serving_batch_sharding(mesh, batch_axis)  # validates the axis
         self.mesh = mesh

@@ -262,6 +262,7 @@ class BatchServer:
                  row_capacity: int = 64, max_batch: int = 8,
                  min_doc_capacity: int = 16, use_patch_kernel: bool = False,
                  use_fused_kernel: bool = True,
+                 delta_threshold: float = 0.0,
                  capacity_class_step: int = 4, device_grow: bool = True,
                  device_defrag: bool = True,
                  pos_pool: Optional[int] = None, mesh=None,
@@ -278,7 +279,21 @@ class BatchServer:
         ``device_defrag`` serve the structural slow paths on-device
         (``pad_state`` / ``gather_slots``) instead of host re-ingests. Set
         all four to their legacy values (False/2/False/False) to reproduce
-        the pre-fused scheduler."""
+        the pre-fused scheduler.
+
+        ``delta_threshold`` is the served tolerance (sigma-delta tier,
+        DESIGN.md §10): 0.0 (default) serves bit-exactly like the ungated
+        stack; > 0 lets code-flipped rows whose hidden state drifted less
+        than the threshold propagate nothing. Suppressed rows always sit at
+        position ids >= the earliest edited pid (causal masking — exactly
+        the rows the ``invalid_from`` / ``touched_from`` watermarks already
+        cover), so suggestion refreshes re-prefill every possibly-drifted
+        row through the exact decode path and stay oracle-TOKEN-exact at
+        any threshold; only ``logits()`` served straight from engine state
+        carries the bounded drift. Every engine this server builds (the
+        base engine and each per-(C, R) bucket re-jit) shares the one
+        threshold — the served tolerance is a server-level contract, not a
+        per-document knob."""
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if capacity_class_step < 2:
@@ -295,6 +310,7 @@ class BatchServer:
         self.min_doc_capacity = next_pow2(min_doc_capacity)
         self.use_patch_kernel = use_patch_kernel
         self.use_fused_kernel = use_fused_kernel
+        self.delta_threshold = float(delta_threshold)
         self.capacity_class_step = capacity_class_step
         self.device_grow = device_grow
         self.device_defrag = device_defrag
@@ -305,6 +321,7 @@ class BatchServer:
                                 row_capacity=self.R,
                                 use_patch_kernel=use_patch_kernel,
                                 use_fused_kernel=use_fused_kernel,
+                                delta_threshold=self.delta_threshold,
                                 mesh=mesh, batch_axis=batch_axis)
         if base.n_shards > max_batch:
             raise ValueError(
@@ -371,7 +388,8 @@ class BatchServer:
                 {}, self.cfg, edit_capacity=edit_capacity,
                 row_capacity=row_capacity,
                 use_patch_kernel=self.use_patch_kernel,
-                use_fused_kernel=self.use_fused_kernel, mesh=self.mesh,
+                use_fused_kernel=self.use_fused_kernel,
+                delta_threshold=self.delta_threshold, mesh=self.mesh,
                 batch_axis=self.batch_axis, _weights=self._weights)
         return self._engines[key]
 
@@ -567,7 +585,12 @@ class BatchServer:
 
     def _touch(self, doc: _BatchDoc, pid: int) -> None:
         """Record an applied edit's position id in the invalidation
-        watermarks (earliest-invalidated-position tracking, DESIGN.md §5)."""
+        watermarks (earliest-invalidated-position tracking, DESIGN.md §5).
+        The same watermark covers sigma-delta-suppressed columns
+        (``delta_threshold > 0``): causal masking confines every propagated
+        OR suppressed row to position ids >= the earliest edited pid, so
+        the min-over-edited-pids here is already the min over
+        possibly-drifted rows (DESIGN.md §10)."""
         pid = int(pid)
         doc.invalid_from = (pid if doc.invalid_from is None
                             else min(doc.invalid_from, pid))

@@ -47,6 +47,15 @@ row. Exactness: identical codes / float-tolerance states vs the NumPy
 engine over mixed edit streams (tests/test_jit_engine.py,
 tests/test_mixed_edit_streams.py).
 
+On top of the VQ code-match gate sits an optional **sigma-delta tier**
+(``delta_threshold``, DESIGN.md §10): a code-flipped row propagates
+downstream only when its recomputed hidden state drifts more than the
+threshold (L∞) from the value it last transmitted. ``delta_threshold=0.0``
+is bit-identical to the ungated engine by construction
+(tests/test_delta_threshold.py); > 0 trades bounded activation drift for
+fewer propagated rows — the tolerance knob between bit-exact serving and
+aggressive reuse.
+
 Batched serving
 ---------------
 Because every step is a fixed-shape pure function of ``(JitState, edit
@@ -245,7 +254,8 @@ class JitIncrementalEngine:
 
     def __init__(self, params: dict, cfg: ArchConfig, *, edit_capacity: int = 8,
                  row_capacity: int = 64, use_patch_kernel: bool = False,
-                 use_fused_kernel: bool = False, _weights=None):
+                 use_fused_kernel: bool = False, delta_threshold: float = 0.0,
+                 _weights=None):
         self.cfg = cfg
         self.C = edit_capacity
         self.R = row_capacity
@@ -257,6 +267,16 @@ class JitIncrementalEngine:
         # launch per layer (kernels/fused_step, DESIGN.md §9). Wins over
         # use_patch_kernel, which it subsumes.
         self.use_fused_kernel = use_fused_kernel
+        # Sigma-delta propagation gate (DESIGN.md §10): a VQ-code-flipped
+        # row propagates downstream only when its recomputed next-layer
+        # value drifts more than this (L∞) from the value it last
+        # transmitted. 0.0 (the default) traces the EXACT pre-threshold
+        # jaxpr — bit-identical serving — because the gate is guarded at
+        # the Python level, never by a traced compare. The engine is a jit
+        # static arg, so the Python float is a compile-time constant.
+        if delta_threshold < 0.0:
+            raise ValueError("delta_threshold must be >= 0")
+        self.delta_threshold = float(delta_threshold)
         if _weights is not None:
             self.W, self.extras, self.meta = _weights
         else:
@@ -340,7 +360,9 @@ class JitIncrementalEngine:
         between its sequence neighbours'; replace/delete target valid slots.
         Returns (new_state, overflow) — overflow=True means the propagation
         bucket R was exceeded at some layer and the result is UNRELIABLE
-        (caller must full_forward)."""
+        (caller must full_forward). Overflow is detected on the PRE-gate
+        changed set, so a ``delta_threshold`` never masks an overflow —
+        thresholding only ever makes the flag conservative."""
         return self._apply_edits_impl(state, slot, tok, pos_id, op)
 
     @functools.partial(jax.jit, static_argnums=0)
@@ -538,19 +560,43 @@ class JitIncrementalEngine:
             ffn = _gelu(h2 @ Wl["w_up"] + Wl["b_up"]) @ Wl["w_down"] + Wl["b_down"]
             x_out_rows = x_mid + ffn
 
-            x_next = state.x[li + 1].at[jnp.where(next_valid, next_idx,
+            keep = next_valid
+            if self.delta_threshold > 0.0:
+                # Sigma-delta gate (DESIGN.md §10): compare each selected
+                # row's fresh recompute against the value it LAST
+                # TRANSMITTED — the stored x[li+1] row — so sub-threshold
+                # drift accumulates across steps and is re-examined on
+                # every later code flip. Suppressed rows still take their
+                # new T/codes at THIS layer (the quantizer state advances;
+                # only the transmission is withheld), write nothing to
+                # x[li+1], and are excluded from the next layer's dirty
+                # bucket and patch columns — i.e. the keep bits fold into
+                # the next layer's engine-built mask. The Python-level
+                # guard keeps the threshold-0 jaxpr untouched.
+                x_prev_rows = state.x[li + 1][next_idx]
+                if self.use_fused_kernel:
+                    from repro.kernels.fused_step import delta_gate
+
+                    moved = delta_gate(x_out_rows, x_prev_rows,
+                                       self.delta_threshold)
+                else:
+                    moved = (jnp.max(jnp.abs(x_out_rows - x_prev_rows),
+                                     axis=-1) > self.delta_threshold)
+                keep = next_valid & moved
+
+            x_next = state.x[li + 1].at[jnp.where(keep, next_idx,
                                                    drop)].set(
                 x_out_rows, mode="drop")
             new_x.append(x_next)
             new_q.append(q_all); new_k.append(k_all); new_v.append(v_all)
             new_vc.append(vc_all); new_T.append(T_all); new_codes.append(codes)
             dirty_idx = next_idx
-            new_mask = next_valid
+            new_mask = keep
             # deeper layers: propagated rows patch old→new; deleted slots
             # keep riding along as old-only columns
             col_idx = jnp.concatenate([next_idx, slot_safe])
-            col_old = jnp.concatenate([next_valid, is_del])
-            col_new = jnp.concatenate([next_valid,
+            col_old = jnp.concatenate([keep, is_del])
+            col_new = jnp.concatenate([keep,
                                        jnp.zeros_like(is_del)])
 
         st = lambda l: jnp.stack(l)

@@ -26,6 +26,16 @@ Exactness contract (tests/test_suggest_differential.py): the suggestion
 token sequence equals a from-scratch full-recompute decode oracle on the
 edited document, for every prefix of a mixed insert/delete/replace stream —
 including defrag and buffer-growth re-ingests, which drop all reuse.
+
+The contract survives thresholded propagation (``delta_threshold > 0``,
+DESIGN.md §10) unchanged: a sigma-delta-suppressed row is always at a
+position id >= the earliest edited pid (causality), i.e. at/after the
+``invalid_from`` / ``touched_from`` boundary — and every row at/after the
+boundary is re-prefilled here through the EXACT transformer math, never
+read from the (possibly drifted) engine caches. Reused prefix rows were
+never touched by any incremental pass, so they carry no drift at any
+threshold. Suggestions therefore stay oracle-token-exact for the served
+tolerance (tests/test_delta_threshold.py).
 """
 from __future__ import annotations
 
@@ -160,7 +170,9 @@ class SuggestionEngine:
         when the cache must be (re)built from the KV export (first refresh,
         or capacity change). Rows before the relevant boundary are reused;
         rows at/after it — whose values an edit may have changed, directly
-        or through count renormalization / VQ code flips — are re-prefilled
+        or through count renormalization / VQ code flips, or whose
+        propagation a ``delta_threshold`` suppressed (DESIGN.md §10; such
+        rows never sit before the boundary) — are re-prefilled
         through the decode path. ``on_token`` streams each decoded token as
         it is produced (see ``serving.decode.greedy_continue``). Returns the
         ``n_new`` greedy tokens."""

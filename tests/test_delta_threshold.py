@@ -1,0 +1,319 @@
+"""Sigma-delta thresholded propagation (ISSUE 9, DESIGN.md §10).
+
+The exactness contract, tested from the bottom of the stack to the top:
+
+* **kernel** — ``delta_gate`` (Pallas) vs ``delta_gate_ref`` (jnp oracle)
+  on odd/non-pow2 shapes, including the ``delta == threshold`` edge (the
+  compare is STRICT ``>``: an exactly-at-threshold row is suppressed);
+* **engine, threshold 0** — ``delta_threshold=0.0`` is BITWISE-identical
+  to the default engine on both the fused and inline paths: the Python-
+  level guard means the traced jaxpr is literally the same program;
+* **engine, threshold > 0** — suppression actually happens (an infinite
+  threshold freezes every ``x[1:]`` leaf while layer-0 token/embedding/
+  quantizer state still advances), overflow stays a PRE-gate property
+  (thresholding never hides an overflow), and fused vs inline agree on
+  which rows propagate (codes exact, activations float-close);
+* **server, threshold 0** — a ``BatchServer(delta_threshold=0.0)`` serves
+  a mixed grow/defrag-forcing edit stream bitwise-identically to the
+  default server, and token-exactly vs a plain-Python list oracle;
+* **server, threshold > 0** — suggestions remain oracle-TOKEN-exact at a
+  lossy threshold: suppressed rows always sit at/after the suggestion
+  watermark, and the refresh re-prefills those rows through exact
+  transformer math, so only ``logits()`` ever carries drift.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.vq_opt_125m import smoke_config
+from repro.kernels.fused_step import delta_gate, delta_gate_ref
+from repro.models import transformer as T
+from repro.serving.batch_server import BatchServer
+from repro.serving.jit_engine import JitIncrementalEngine
+from repro.serving.suggest import SuggestionEngine, oracle_suggestion
+
+# ------------------------------------------------------------------ kernel
+
+
+@pytest.mark.parametrize(
+    "r,d,block_r",
+    [
+        (64, 32, 32),    # pow2 everything
+        (13, 7, 8),      # odd rows and feature dim, padded final block
+        (1, 256, 128),   # single row, block_r > r
+        (100, 33, 16),   # non-pow2 both axes
+    ],
+)
+def test_delta_gate_kernel_matches_ref(r, d, block_r):
+    rng = np.random.default_rng(r + d)
+    x_new = jnp.asarray(rng.normal(size=(r, d)).astype(np.float32))
+    x_old = jnp.asarray(rng.normal(size=(r, d)).astype(np.float32))
+    for thr in (0.25, 1.0, 3.0):
+        got = delta_gate(x_new, x_old, thr, block_r=block_r)
+        want = delta_gate_ref(x_new, x_old, thr)
+        assert got.shape == (r,) and got.dtype == bool
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_delta_gate_strict_at_threshold():
+    """A row whose L-inf change is EXACTLY the threshold is suppressed
+    (strict >), one epsilon above propagates — in kernel and ref alike."""
+    thr = 0.5
+    x_old = jnp.zeros((3, 4), jnp.float32)
+    above = np.nextafter(np.float32(thr), np.float32(1.0))  # f32 next-up
+    x_new = jnp.asarray([[thr, 0, 0, 0],      # == thr: drop (strict >)
+                         [above, 0, 0, 0],    # one ulp above: keep
+                         [0.0, 0, 0, 0]], jnp.float32)  # no change: drop
+    want = np.array([False, True, False])
+    np.testing.assert_array_equal(
+        np.asarray(delta_gate(x_new, x_old, thr, block_r=2)), want)
+    np.testing.assert_array_equal(
+        np.asarray(delta_gate_ref(x_new, x_old, thr)), want)
+
+
+# ------------------------------------------------------------------ engine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_config(vqt=True)
+    params = jax.device_get(T.init_params(jax.random.PRNGKey(1), cfg))
+    base = JitIncrementalEngine(params, cfg, edit_capacity=4, row_capacity=16)
+    return cfg, params, base
+
+
+def _engine(setup, **kw):
+    cfg, _, base = setup
+    kw.setdefault("edit_capacity", 4)
+    kw.setdefault("row_capacity", 16)
+    return JitIncrementalEngine({}, cfg, _weights=base.weights, **kw)
+
+
+def _ragged_start(cfg, engine, rng, n=20, n_cap=24):
+    tokens = np.zeros(n_cap, np.int32)
+    tokens[:n] = rng.integers(0, cfg.vocab, n)
+    valid = np.zeros(n_cap, bool)
+    valid[:n] = True
+    valid[5] = False  # interior hole
+    positions = np.full(n_cap, cfg.pos_pool - 1, np.int32)
+    positions[:n] = np.arange(n) * 7
+    return engine.full_forward(jnp.asarray(tokens), jnp.asarray(positions),
+                               jnp.asarray(valid))
+
+
+def _mixed_bucket(positions_of):
+    from repro.serving.jit_engine import OP_DELETE, OP_INSERT, OP_REPLACE
+
+    slot = jnp.asarray([3, 8, 21, -1], jnp.int32)
+    tok = jnp.asarray([7, 0, 11, 0], jnp.int32)
+    pos = jnp.asarray([positions_of(3), 0, 40, 0], jnp.int32)
+    op = jnp.asarray([OP_REPLACE, OP_DELETE, OP_INSERT, 0], jnp.int32)
+    return slot, tok, pos, op
+
+
+@pytest.mark.parametrize("fused", [False, True])
+def test_threshold_zero_engine_bitwise(setup, fused):
+    """delta_threshold=0.0 is bitwise-identical to the default engine —
+    every state leaf, every overflow flag, on a mixed typed bucket —
+    because the Python-level guard leaves the traced program untouched."""
+    cfg, params, base = setup
+    rng = np.random.default_rng(0)
+    ref = _engine(setup, use_fused_kernel=fused)
+    zed = _engine(setup, use_fused_kernel=fused, delta_threshold=0.0)
+    sr = _ragged_start(cfg, ref, rng)
+    sz = _ragged_start(cfg, zed, rng2 := np.random.default_rng(0))
+    del rng2
+    slot, tok, pos, op = _mixed_bucket(lambda i: int(sr.positions[i]))
+    nr, ovr = ref.apply_edits(sr, slot, tok, pos, op)
+    nz, ovz = zed.apply_edits(sz, slot, tok, pos, op)
+    assert bool(ovr) == bool(ovz)
+    for name, a, b in zip(nr._fields, nr, nz):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)
+
+
+def test_threshold_rejects_negative(setup):
+    with pytest.raises(ValueError, match="delta_threshold"):
+        _engine(setup, delta_threshold=-0.1)
+
+
+def test_infinite_threshold_freezes_downstream_only(setup):
+    """At an unreachable threshold an edit still lands at layer 0 (token,
+    embedding row, quantizer state) but NOTHING propagates: x[1:] is
+    bitwise-frozen. This is the pure sigma-delta limit — and the sharpest
+    proof the gate withholds transmission without stalling the quantizer."""
+    cfg, params, base = setup
+    rng = np.random.default_rng(1)
+    eng = _engine(setup, delta_threshold=1e9)
+    s = _ragged_start(cfg, eng, rng)
+    pad = jnp.asarray([-1, -1, -1], jnp.int32)
+    ns, ovf = eng.apply_replaces(
+        s, jnp.concatenate([jnp.asarray([2], jnp.int32), pad]),
+        jnp.asarray([5, 0, 0, 0], jnp.int32))
+    assert not bool(ovf)
+    assert int(ns.tokens[2]) == 5
+    assert np.any(np.asarray(ns.x[0][2]) != np.asarray(s.x[0][2]))
+    np.testing.assert_array_equal(np.asarray(ns.x[1:]), np.asarray(s.x[1:]))
+    # the edited row's layer-0 quantizer state advanced regardless
+    moved = (np.any(np.asarray(ns.codes[0][:, 2]) != np.asarray(s.codes[0][:, 2]))
+             or np.any(np.asarray(ns.T[0][2]) != np.asarray(s.T[0][2])))
+    assert moved
+
+
+def test_overflow_is_pre_gate(setup):
+    """Overflow is detected on the PRE-gate changed set: a bucket that
+    overflows the row capacity under the exact engine must still flag
+    overflow under ANY threshold — thresholding never masks the bit the
+    server's full-forward fallback depends on."""
+    cfg, params, base = setup
+    rng = np.random.default_rng(2)
+    ref = _engine(setup, row_capacity=2)
+    thr = _engine(setup, row_capacity=2, delta_threshold=1e9)
+    sr = _ragged_start(cfg, ref, rng)
+    st = _ragged_start(cfg, thr, np.random.default_rng(2))
+    bucket = (jnp.asarray([1, 3, 9, 12], jnp.int32),
+              jnp.asarray([5, 6, 7, 8], jnp.int32))
+    _, ovr = ref.apply_replaces(sr, *bucket)
+    _, ovt = thr.apply_replaces(st, *bucket)
+    assert bool(ovr), "fixture should overflow R=2 under the exact engine"
+    assert bool(ovt) == bool(ovr)
+
+
+def test_thresholded_fused_matches_inline(setup):
+    """At a lossy threshold the fused and inline paths agree on WHICH rows
+    propagate (L-inf/abs/> are order-insensitive, so the keep booleans are
+    bitwise-equal) — codes exact, activations float-close."""
+    cfg, params, base = setup
+    rng = np.random.default_rng(3)
+    inline = _engine(setup, delta_threshold=2.0)
+    fused = _engine(setup, use_fused_kernel=True, delta_threshold=2.0)
+    si = _ragged_start(cfg, inline, rng)
+    sf = _ragged_start(cfg, fused, np.random.default_rng(3))
+    slot, tok, pos, op = _mixed_bucket(lambda i: int(si.positions[i]))
+    for _ in range(3):
+        si, ovi = inline.apply_edits(si, slot, tok, pos, op)
+        sf, ovf = fused.apply_edits(sf, slot, tok, pos, op)
+        assert bool(ovi) == bool(ovf)
+    np.testing.assert_array_equal(np.asarray(si.tokens), np.asarray(sf.tokens))
+    np.testing.assert_array_equal(np.asarray(si.valid), np.asarray(sf.valid))
+    np.testing.assert_array_equal(np.asarray(si.codes), np.asarray(sf.codes))
+    np.testing.assert_allclose(np.asarray(si.x), np.asarray(sf.x), atol=3e-4)
+    np.testing.assert_allclose(np.asarray(si.T), np.asarray(sf.T), atol=3e-4)
+
+
+# ------------------------------------------------------------------ server
+
+
+def _mk_server(cfg, params, **kw):
+    base = dict(edit_capacity=4, row_capacity=16, max_batch=2,
+                min_doc_capacity=8, pos_pool=256)
+    base.update(kw)
+    return BatchServer(params, cfg, **base)
+
+
+def _drive_pair(cfg, servers, n_edits, seed):
+    """Drive identical mixed streams into every server, mirroring each
+    edit into plain-Python reference lists (the NumPy-free oracle).
+    Front-biased inserts + tiny pos_pool force grow AND defrag."""
+    rng = np.random.default_rng(seed)
+    refs = {did: [int(t) for t in servers[0].tokens(did)]
+            for did in sorted(servers[0].docs)}
+    for _ in range(n_edits):
+        did = sorted(refs)[int(rng.integers(len(refs)))]
+        r = refs[did]
+        u = rng.random()
+        if u < 0.55 or len(r) < 3:
+            pos = int(rng.integers(min(len(r) + 1, 2)))  # front-biased
+            tokv = int(rng.integers(1, cfg.vocab))
+            r.insert(pos, tokv)
+            for srv in servers:
+                srv.submit_insert(did, pos, tokv)
+        elif u < 0.8:
+            pos = int(rng.integers(len(r)))
+            tokv = int(rng.integers(1, cfg.vocab))
+            r[pos] = tokv
+            for srv in servers:
+                srv.submit_replace(did, pos, tokv)
+        else:
+            pos = int(rng.integers(len(r)))
+            del r[pos]
+            for srv in servers:
+                srv.submit_delete(did, pos)
+        for srv in servers:
+            srv.flush()
+    return refs
+
+
+@pytest.fixture(scope="module")
+def server_setup():
+    cfg = smoke_config(vqt=True)
+    params = jax.device_get(T.init_params(jax.random.PRNGKey(1), cfg))
+    return cfg, params
+
+
+def test_threshold_zero_server_bitwise(server_setup):
+    """End-to-end differential: a delta_threshold=0.0 server serves a
+    grow/defrag-forcing mixed stream bitwise-identically to the default
+    server (tokens AND logits), and token-exactly vs the list oracle."""
+    cfg, params = server_setup
+    docs = {"a": [5, 9, 2, 7, 1, 3], "b": [4, 4, 8, 1, 2, 6]}
+    ref = _mk_server(cfg, params)
+    zed = _mk_server(cfg, params, delta_threshold=0.0)
+    for srv in (ref, zed):
+        srv.open_documents({k: list(v) for k, v in docs.items()})
+    refs = _drive_pair(cfg, (ref, zed), n_edits=24, seed=7)
+    assert ref.stats.device_grows >= 1 or ref.stats.device_defrags >= 1
+    for did in docs:
+        assert list(zed.tokens(did)) == refs[did]
+        np.testing.assert_array_equal(ref.tokens(did), zed.tokens(did))
+        np.testing.assert_array_equal(np.asarray(ref.logits(did)),
+                                      np.asarray(zed.logits(did)))
+
+
+def test_lossy_server_tokens_exact_logits_drift_bounded(server_setup):
+    """At a lossy threshold the DOCUMENT is still served token-exactly
+    (edits land in the host mirrors and layer-0 state unconditionally);
+    only the logits drift, and boundedly so."""
+    cfg, params = server_setup
+    docs = {"a": [5, 9, 2, 7, 1, 3, 8, 2]}
+    ref = _mk_server(cfg, params)
+    lossy = _mk_server(cfg, params, delta_threshold=2.0)
+    for srv in (ref, lossy):
+        srv.open_documents({k: list(v) for k, v in docs.items()})
+    refs = _drive_pair(cfg, (ref, lossy), n_edits=16, seed=11)
+    assert list(lossy.tokens("a")) == refs["a"]
+    drift = float(np.max(np.abs(np.asarray(lossy.logits("a"))
+                                - np.asarray(ref.logits("a")))))
+    assert np.isfinite(drift)
+
+
+def test_lossy_server_suggestions_match_oracle(server_setup):
+    """Suggestions are oracle-TOKEN-exact at a lossy threshold: suppressed
+    rows never sit before the suggestion watermark (causal mask ⇒ every
+    changed-or-suppressed row has pos >= the earliest edited pid), and the
+    refresh re-prefills all rows at/after the boundary through exact
+    transformer math — the engine's drift never reaches the decode."""
+    cfg, params = server_setup
+    n_new = 4
+    srv = _mk_server(cfg, params, delta_threshold=2.0, min_doc_capacity=16)
+    srv.open_document("d", [3, 1, 4, 1, 5, 9, 2, 6])
+    oracle_eng = JitIncrementalEngine(params, cfg, edit_capacity=4,
+                                      row_capacity=16)
+    oracle_sugg = SuggestionEngine(params, cfg)
+    rng = np.random.default_rng(13)
+    for i in range(6):
+        n = srv.docs["d"].n_virtual
+        if i % 2 == 0:
+            srv.submit_replace("d", int(rng.integers(n)),
+                               int(rng.integers(1, cfg.vocab)))
+        else:
+            srv.submit_insert("d", int(rng.integers(n + 1)),
+                              int(rng.integers(1, cfg.vocab)))
+        srv.flush()
+        got = srv.suggest("d", n_new=n_new)
+        doc = srv.docs["d"]
+        want = oracle_suggestion(params, cfg, oracle_eng, doc.tokens,
+                                 doc.positions, doc.valid, n_new,
+                                 suggester=oracle_sugg)
+        np.testing.assert_array_equal(got, want, err_msg=f"edit {i}")

@@ -1,0 +1,82 @@
+"""Lint: every ``DESIGN.md §<id>`` citation must resolve to a real heading.
+
+The codebase cites design sections from docstrings, comments, tests and
+benchmarks ("the causal mask argument, DESIGN.md §10"). Those citations
+are load-bearing documentation — a renumbered or deleted section silently
+orphans every pointer to it. This lint closes the loop:
+
+* **headings** — ``## §<id>`` lines in DESIGN.md define the valid ids
+  (numeric like ``§9`` or named like ``§Arch-applicability``);
+* **citations** — ``DESIGN.md §<id>`` anywhere under src/, tests/,
+  benchmarks/, examples/, tools/ (*.py) plus the top-level *.md files;
+* a citation whose id has no matching heading fails the lint with
+  file:line coordinates.
+
+CI runs this next to ruff (see .github/workflows/ci.yml). Run locally::
+
+    python tools/check_design_refs.py
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+HEADING_RE = re.compile(r"^##\s+§([\w-]+)", re.MULTILINE)
+CITATION_RE = re.compile(r"DESIGN\.md\s+§([\w-]+)")
+CODE_DIRS = ("src", "tests", "benchmarks", "examples", "tools")
+# ISSUE.md is deliberately absent: it is the transient per-PR task spec
+# and may cite sections it is ASKING to be written
+TOP_DOCS = ("README.md", "ROADMAP.md", "CHANGES.md", "DESIGN.md",
+            "PAPER.md", "PAPERS.md", "SNIPPETS.md")
+
+
+def headings(design_path: str) -> set[str]:
+    with open(design_path, encoding="utf-8") as f:
+        return set(HEADING_RE.findall(f.read()))
+
+
+def citation_files() -> list[str]:
+    files = []
+    for d in CODE_DIRS:
+        for dirpath, dirnames, filenames in os.walk(os.path.join(ROOT, d)):
+            dirnames[:] = [n for n in dirnames if n != "__pycache__"]
+            files += [os.path.join(dirpath, n) for n in filenames
+                      if n.endswith(".py")]
+    files += [p for n in TOP_DOCS
+              if os.path.exists(p := os.path.join(ROOT, n))]
+    return sorted(files)
+
+
+def main() -> int:
+    design = os.path.join(ROOT, "DESIGN.md")
+    valid = headings(design)
+    if not valid:
+        print(f"check_design_refs: no '## §' headings found in {design}")
+        return 1
+    dangling = []
+    n_citations = 0
+    for path in citation_files():
+        with open(path, encoding="utf-8") as f:
+            for lineno, line in enumerate(f, 1):
+                for m in CITATION_RE.finditer(line):
+                    n_citations += 1
+                    if m.group(1) not in valid:
+                        rel = os.path.relpath(path, ROOT)
+                        dangling.append(
+                            f"{rel}:{lineno}: DESIGN.md §{m.group(1)} "
+                            "does not match any '## §' heading")
+    for d in dangling:
+        print(d)
+    if dangling:
+        print(f"check_design_refs: {len(dangling)} dangling citation(s) "
+              f"(valid sections: {', '.join(sorted(valid))})")
+        return 1
+    print(f"check_design_refs: {n_citations} citations across "
+          f"{len(valid)} sections, all resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
