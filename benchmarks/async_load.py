@@ -15,7 +15,8 @@ Both shapes are compared token-exactly against a sequential replay of the
 same per-document request streams on the same ``BatchServer`` — the gated
 bits (``tokens_match``, ``suggestions_match``, ``edits_applied``) are
 deterministic because threads own disjoint documents and each document's
-stream is seeded. Latency percentiles (admission-to-completion, from
+stream comes from the seeded ``TrafficGenerator`` in ``data/edit_stream``
+(shared with ``benchmarks.fleet_load``). Latency percentiles (admission-to-completion, from
 ``BatchStats.edit_latency`` / ``suggest_latency``), throughput and round
 accounting are reported but never gated (runner noise).
 
@@ -38,28 +39,6 @@ import numpy as np
 from benchmarks.common import ensure_results
 
 
-def _client_ops(rng, cfg, ref: list, n_edits: int) -> list:
-    """Seeded per-document edit stream against a local reference doc."""
-    ops = []
-    for _ in range(n_edits):
-        kind = str(rng.choice(["replace", "insert", "delete"],
-                              p=[0.6, 0.3, 0.1]))
-        if kind == "delete" and len(ref) <= 6:
-            kind = "replace"
-        tok = int(rng.integers(cfg.vocab))
-        if kind == "insert":
-            pos = int(rng.integers(len(ref) + 1))
-            ref.insert(pos, tok)
-        elif kind == "delete":
-            pos = int(rng.integers(len(ref)))
-            del ref[pos]
-        else:
-            pos = int(rng.integers(len(ref)))
-            ref[pos] = tok
-        ops.append((kind, pos, tok))
-    return ops
-
-
 def _submit(server, doc_id: str, op) -> object:
     kind, pos, tok = op
     if kind == "insert":
@@ -76,6 +55,7 @@ def run(n_docs: int = 3, doc_len: int = 24, n_edits: int = 6,
 
     from repro.common.compile_cache import enable_persistent_compilation_cache
     from repro.configs.vq_opt_125m import smoke_config
+    from repro.data.edit_stream import TrafficGenerator
     from repro.models import transformer as T
     from repro.serving.async_server import AsyncBatchServer
     from repro.serving.batch_server import BatchServer
@@ -88,15 +68,15 @@ def run(n_docs: int = 3, doc_len: int = 24, n_edits: int = 6,
                       max_batch=max(n_docs, 2), min_doc_capacity=16)
 
     records = []
+    traffic = TrafficGenerator(vocab=cfg.vocab, n_docs=n_docs,
+                               doc_len=doc_len, seed=seed)
     for scenario in ("burst", "interactive"):
         # identical seeded streams for warmup / timed / oracle replays
         def make_docs(tag):
-            rng = np.random.default_rng(seed)
             docs = {}
             for i in range(n_docs):
-                ref = list(rng.integers(0, cfg.vocab, doc_len))
-                ops = _client_ops(np.random.default_rng(seed + 1000 + i),
-                                  cfg, list(ref), n_edits)
+                ref = traffic.base_document(i)
+                ops = traffic.session_ops(i, n_edits, list(ref))
                 docs[f"{scenario}_{tag}_{i}"] = (ref, ops)
             return docs
 

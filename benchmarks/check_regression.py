@@ -128,6 +128,30 @@ GATES = {
             "edits_applied": {"higher_is_better": True, "abs_tol": 0},
         },
     },
+    # ISSUE 10 tentpole: multi-replica fleet behind the router, with a
+    # forced cross-replica migration and a forced failover mid-run. The
+    # exactness/leak bits and the chaos/ack counts are deterministic
+    # (seeded schedule, deterministic placement). p99/throughput are
+    # wall-clock — gated ONLY with cavernous tolerances that catch
+    # order-of-magnitude serving regressions, never runner noise (the
+    # repo-wide wall-clock policy stands; these are smoke ceilings).
+    "fleet_load": {
+        "bench": "BENCH_fleet_load.json",
+        "baseline": "BASELINE_fleet_load.json",
+        "key": "n_replicas",
+        "identity": ("n_docs", "n_sessions", "doc_len", "n_new", "seed"),
+        "metrics": {
+            "tokens_exact": {"must_equal": True},
+            "suggestions_exact": {"must_equal": True},
+            "leak_free": {"must_equal": True},
+            "migrations": {"higher_is_better": True, "abs_tol": 0},
+            "failovers": {"higher_is_better": True, "abs_tol": 0},
+            "edits_acked": {"higher_is_better": True, "abs_tol": 0},
+            "hot_hit_rate": {"higher_is_better": True, "abs_tol": 0.02},
+            "edit_p99_ms": {"higher_is_better": False, "rel_tol": 5.0},
+            "edits_per_s": {"higher_is_better": True, "rel_tol": 0.9},
+        },
+    },
     # ISSUE 4's benchmark, gated since ISSUE 5: deterministic parity bits
     # and the scheduler's placement quality (run under 4 forced host
     # devices — see the bench-gate job's XLA_FLAGS)

@@ -39,6 +39,7 @@ EXPECTED_BENCH = {
     "BENCH_sharded_serving.json",
     "BENCH_state_churn.json",
     "BENCH_delta_pareto.json",
+    "BENCH_fleet_load.json",
 }
 
 
@@ -176,6 +177,13 @@ def main():
                           doc_len=48 if args.full else 24,
                           n_edits=12 if args.full else 6)
     summary.append({"benchmark": "async_load", "rows": recs})
+
+    print(f"\n=== Fleet serving: router + replicas, migration + failover "
+          f"({time.time()-t0:.0f}s) ===")
+    from benchmarks import fleet_load
+
+    recs = fleet_load.run(full=args.full)
+    summary.append({"benchmark": "fleet_load", "rows": recs})
 
     if not args.skip_accuracy:
         print(f"\n=== Table 1: accuracy parity ({time.time()-t0:.0f}s) ===")

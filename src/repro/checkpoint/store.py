@@ -75,6 +75,28 @@ def restore_train_state(path: str, like):
 _DOC_META_KEY = "doc_meta/json"
 
 
+def atomic_savez(path: str, arrays: dict) -> None:
+    """``np.savez`` with crash-safe visibility: write to a temp file in the
+    SAME directory, fsync, then ``os.replace`` into place. A crash mid-write
+    leaves at most an orphan ``*.tmp`` — the destination path either does not
+    exist or holds a complete npz, so a reader (rehydrate, migration import)
+    can never observe a truncated archive. Same-directory temp matters:
+    ``os.replace`` is only atomic within one filesystem."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    try:
+        # np.savez appends ".npz" when handed a bare str path; an open file
+        # object keeps the temp name exactly as constructed.
+        with open(tmp, "wb") as f:
+            np.savez(f, **arrays)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+
+
 def save_document_state(path: str, state, *, allocator_ids,
                         invalid_from: Optional[int] = None,
                         touched_from: Optional[int] = None,
@@ -96,7 +118,7 @@ def save_document_state(path: str, state, *, allocator_ids,
     meta["invalid_from"] = invalid_from
     meta["touched_from"] = touched_from
     arrays[_DOC_META_KEY] = np.asarray(json.dumps(meta))
-    np.savez(path, **arrays)
+    atomic_savez(path, arrays)
 
 
 def restore_document_state(path: str):
@@ -117,3 +139,61 @@ def restore_document_state(path: str):
         raise KeyError("document checkpoint missing allocator/ids")
     meta = json.loads(str(data[_DOC_META_KEY])) if _DOC_META_KEY in data else {}
     return state, data["allocator/ids"], meta
+
+
+# --------------------------------------------------------------------------
+# Full serving-document snapshots (fleet migration / failover, DESIGN.md §11)
+#
+# Migration needs more than the JitState: the BatchServer's host mirrors
+# (tokens/valid/positions at n_cap) and — critically — the slot layout and
+# free-list ORDER. Attention reduces over the slot axis, so a permutation of
+# slots changes float summation order; bit-exact migration therefore ships
+# the layout verbatim instead of re-deriving it on import.
+
+_MIRROR_FIELDS = ("tokens", "valid", "positions", "slots", "free")
+
+
+def save_serving_document(path: str, state, *, allocator_ids,
+                          mirrors: dict, meta: dict) -> None:
+    """Atomic one-file snapshot of a live serving document: the durable
+    ``JitState`` + allocator ids (as in ``save_document_state``) plus the
+    server-side host mirrors and slot layout under ``mirror/<name>``, and a
+    JSON metadata blob (row_capacity, watermarks, pos_pool, consistency
+    flag...). This is the unit of cross-replica migration (DESIGN.md §11)."""
+    from repro.serving.jit_engine import JitState
+
+    if not isinstance(state, JitState):
+        raise TypeError(f"expected a JitState, got {type(state).__name__}")
+    missing = [m for m in _MIRROR_FIELDS if m not in mirrors]
+    if missing:
+        raise KeyError(f"serving snapshot missing mirrors {missing}")
+    arrays = {f"state/{name}": np.asarray(leaf)
+              for name, leaf in zip(JitState._fields, state)}
+    arrays["allocator/ids"] = np.asarray(allocator_ids, np.int32)
+    for name in _MIRROR_FIELDS:
+        arrays[f"mirror/{name}"] = np.asarray(mirrors[name])
+    arrays[_DOC_META_KEY] = np.asarray(json.dumps(meta))
+    atomic_savez(path, arrays)
+
+
+def restore_serving_document(path: str):
+    """Inverse of ``save_serving_document``. Returns
+    ``(state, allocator_ids, mirrors, meta)`` with host-array leaves;
+    raises ``KeyError`` when the file is a bare ``save_document_state``
+    checkpoint (no ``mirror/*`` entries) so callers can fall back."""
+    from repro.serving.jit_engine import JitState
+
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    missing = [f for f in JitState._fields if f"state/{f}" not in data]
+    if missing:
+        raise KeyError(f"serving snapshot missing state fields {missing}")
+    state = JitState(*(data[f"state/{f}"] for f in JitState._fields))
+    mirrors = {}
+    for name in _MIRROR_FIELDS:
+        key = f"mirror/{name}"
+        if key not in data:
+            raise KeyError(f"serving snapshot missing {key} "
+                           "(plain document checkpoint? use restore_document_state)")
+        mirrors[name] = data[key]
+    meta = json.loads(str(data[_DOC_META_KEY])) if _DOC_META_KEY in data else {}
+    return state, data["allocator/ids"], mirrors, meta

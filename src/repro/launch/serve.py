@@ -13,6 +13,12 @@ Async-fleet demo (ISSUE 6: concurrent sessions through the deadline-batching
 front end; per-edit / per-suggestion latency SLOs printed at the end):
   PYTHONPATH=src python -m repro.launch.serve --arch vq-opt-125m --smoke \
       --async-fleet --docs 4 --doc-len 48 --edits 24 --delay-ms 8
+
+Multi-replica fleet demo (ISSUE 10: subprocess replica workers behind the
+document router, with a live cross-replica migration mid-run; aggregated
+fleet stats table at the end):
+  PYTHONPATH=src python -m repro.launch.serve --arch vq-opt-125m --smoke \
+      --fleet 2 --docs 4 --doc-len 24 --edits 12
 """
 from __future__ import annotations
 
@@ -158,6 +164,64 @@ def run_async_fleet(args, cfg, params) -> None:
               f"p99={h.p99:.1f}ms max={h.max_ms:.1f}ms")
 
 
+def run_fleet(args, cfg) -> None:
+    """Replica workers behind the document router (DESIGN.md §11): sessions
+    spread across subprocess replicas by load, one document live-migrates
+    through the shared cold tier mid-run, and the router's aggregated
+    stats — fleet throughput, latency percentiles, hot-hit rate — print as
+    a table. Workers build their own parameters (same seed, bitwise-equal
+    weights), so --ckpt does not apply here."""
+    from repro.serving.fleet import FleetRouter
+
+    corpus = SyntheticCorpus(vocab=cfg.vocab, seed=0)
+    docs = {f"d{i}": [int(t) for t in corpus.document(args.doc_len, i)]
+            for i in range(args.docs)}
+    rng = np.random.default_rng(2)
+    with FleetRouter(args.fleet, arch=args.arch, smoke=args.smoke,
+                     max_batch_delay_ms=args.delay_ms) as fleet:
+        print(f"booted {args.fleet} replica workers "
+              f"(shared cold tier: {fleet.cold_dir})")
+        for t in [fleet.open_document(d, toks) for d, toks in docs.items()]:
+            t.result(600)
+        placement = {d: fleet.owner_of(d) for d in docs}
+        print("placement: " + "  ".join(
+            f"{d}->r{r}" for d, r in sorted(placement.items())))
+        for i in range(args.edits):
+            did = f"d{int(rng.integers(args.docs))}"
+            if i == args.edits // 2 and args.fleet > 1:
+                dst = (fleet.owner_of(did) + 1) % args.fleet
+                fleet.migrate(did, dst)
+                print(f"edit {i:3d}: migrated {did} -> r{dst} "
+                      "(bit-exact, via the shared cold tier)")
+            toks = fleet.tokens(did).result(600)
+            pos = int(rng.integers(len(toks)))
+            fleet.submit_replace(did, pos,
+                                 int(rng.integers(cfg.vocab))).result(600)
+        sugg = fleet.suggest(did, 8).result(600)
+        print(f"last suggestion for {did}: {[int(x) for x in sugg[:4]]}...")
+        agg = fleet.stats(600)
+        print("\nfleet totals:")
+        rows = [("replicas alive", agg["replicas_alive"]),
+                ("documents open", agg["docs_open"]),
+                ("edits applied", agg["edits_applied"]),
+                ("rounds (deadline)",
+                 f"{agg['rounds']} ({agg['deadline_rounds']})"),
+                ("migrations", agg["router"]["migrations"]),
+                ("hot-hit rate", f"{agg['hot_hit_rate']:.2f}"),
+                ("edit p50/p99 ms",
+                 f"{agg['edit_latency']['p50_ms']:.1f} / "
+                 f"{agg['edit_latency']['p99_ms']:.1f}"),
+                ("suggest p50/p99 ms",
+                 f"{agg['suggest_latency']['p50_ms']:.1f} / "
+                 f"{agg['suggest_latency']['p99_ms']:.1f}")]
+        for s in agg["per_replica"]:
+            rows.append((f"{s['replica']} edits/docs",
+                         f"{s['batch']['edits_applied']}/{s['docs_open']}"))
+        width = max(len(k) for k, _ in rows)
+        for k, v in rows:
+            print(f"  {k:<{width}}  {v}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="vq-opt-125m")
@@ -175,12 +239,18 @@ def main():
                     help="concurrent sessions via the deadline-batching "
                          "async front end")
     ap.add_argument("--delay-ms", type=float, default=8.0,
-                    help="(--async-fleet) max_batch_delay_ms dispatch "
-                         "deadline")
+                    help="(--async-fleet/--fleet) max_batch_delay_ms "
+                         "dispatch deadline")
+    ap.add_argument("--fleet", type=int, default=0, metavar="N",
+                    help="serve through N subprocess replica workers behind "
+                         "the document router (ISSUE 10)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
     assert cfg.vqt is not None, "serve demo requires a VQT config (e.g. vq-opt-125m)"
+    if args.fleet:
+        run_fleet(args, cfg)  # replicas own their params (same seed)
+        return
     params = T.init_params(jax.random.PRNGKey(0), cfg)
     if args.ckpt:
         from repro.checkpoint import restore_pytree

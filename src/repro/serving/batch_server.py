@@ -81,6 +81,7 @@ timings live in ``benchmarks/batch_scaling.run_jit_batched``.
 """
 from __future__ import annotations
 
+import os
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Optional, Sequence
@@ -88,6 +89,9 @@ from typing import Optional, Sequence
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.store import (
+    restore_serving_document, save_serving_document,
+)
 from repro.common.bucketing import capacity_class, next_pow2
 from repro.common.compile_cache import enable_persistent_compilation_cache
 from repro.configs.base import ArchConfig
@@ -98,7 +102,8 @@ from repro.serving.batch_engine import (
 )
 from repro.serving.latency import LatencyStats
 from repro.serving.jit_engine import (
-    JitState, OP_DELETE, OP_INSERT, OP_REPLACE, state_nbytes_for,
+    JitState, OP_DELETE, OP_INSERT, OP_REPLACE, state_from_host,
+    state_nbytes_for, state_to_host,
 )
 from repro.serving.state_store import StateStore
 from repro.serving.suggest import (
@@ -178,6 +183,9 @@ class BatchStats:
     # corner: the pre-take copy was consumed by a mid-take re-ingest)
     state_touches: int = 0  # device-state reads routed through the store
     hot_hits: int = 0  # touches served without a rehydration/rebuild
+    # ---- cross-process migration (fleet serving, DESIGN.md §11)
+    exports: int = 0  # export_document calls (doc handed off to a snapshot)
+    imports: int = 0  # import_document calls (doc adopted from a snapshot)
 
     @property
     def mean_batch(self) -> float:
@@ -347,13 +355,20 @@ class BatchServer:
         # per decoded token, as the decode loop produces it — cached-hit
         # fast paths do not re-stream tokens the subscriber already has
         self.on_suggest_token = None
+        # True while step() is inside its take/dispatch section: host mirrors
+        # of a peeled document run AHEAD of its device state there, so
+        # snapshots the store captures mid-round are flagged inconsistent
+        # (in-process rehydration is unaffected; fleet failover refuses to
+        # adopt them and falls back to re-opening from tokens, DESIGN.md §11)
+        self._in_round = False
         # tiered residency (DESIGN.md §7): budget=None still tracks bytes
         # and tiers — accounting is always on, eviction only under a budget
         self.store = StateStore(
             docs=self.docs, stats=self.stats,
             drop_suggest=self._drop_suggest_cache, reingest=self._reingest,
             device_budget_bytes=device_budget_bytes,
-            host_budget_bytes=host_budget_bytes, spill_dir=spill_dir)
+            host_budget_bytes=host_budget_bytes, spill_dir=spill_dir,
+            in_round=lambda: self._in_round)
 
     def _drop_suggest_cache(self, doc_id: str) -> None:
         """Release one document's suggestion decode cache (the store's
@@ -778,6 +793,7 @@ class BatchServer:
         takes = []  # (doc, kind, arrays, count)
         undone: dict[int, tuple] = {}  # id(doc) -> (doc, snapshot)
         applied = 0
+        self._in_round = True
         try:
             for d in ready:
                 snap = self._snapshot(d)
@@ -808,6 +824,8 @@ class BatchServer:
             for d, snap in undone.values():
                 self._restore(d, snap)
             raise
+        finally:
+            self._in_round = False
         self._refresh_suggestions()
         return applied
 
@@ -1124,3 +1142,99 @@ class BatchServer:
         eng = self.engine(self.C, self.R)
         state = self.store.ensure_hot(doc)
         return np.asarray(eng.logits_at(state, jnp.int32(doc.slots[-1])))
+
+    # -------------------------------------------------- migration (DESIGN.md §11)
+
+    def checkpoint_document(self, doc_id: str, path: str) -> None:
+        """Write a flushed document's FULL serving snapshot to ``path``
+        (atomic) while keeping it open: the JitState, the allocator ids, the
+        host mirrors and — critically — the slot layout and free-list order.
+        Attention reduces over the slot axis, so bit-exact adoption must
+        reproduce the layout verbatim; ``import_document`` does. The
+        document is rehydrated first, so a warm/cold resident checkpoints
+        the same bits a hot one would."""
+        doc = self._flushed(doc_id)
+        # ensure_hot FIRST: it releases any cold holding (which may live at
+        # this very path when the store shares the fleet's cold directory) —
+        # writing before rehydrating would let the release delete the export
+        state = self.store.ensure_hot(doc)
+        save_serving_document(
+            path, state_to_host(state),
+            allocator_ids=doc.allocator.snapshot(),
+            mirrors={
+                "tokens": doc.tokens.copy(),
+                "valid": doc.valid.copy(),
+                "positions": doc.positions.copy(),
+                "slots": np.asarray(doc.slots, np.int32),
+                "free": np.asarray(doc.free, np.int32),
+            },
+            meta={
+                "doc_id": doc_id,
+                "row_capacity": int(doc.row_capacity),
+                "n_virtual": int(doc.n_virtual),
+                "suggest_n": int(doc.suggest_n),
+                "pos_pool": int(self.pos_pool),
+                "invalid_from": doc.invalid_from,
+                "touched_from": doc.touched_from,
+                "consistent": True,  # flushed + out-of-round by construction
+            })
+
+    def export_document(self, doc_id: str, path: str) -> None:
+        """Hand a document off for migration: checkpoint, then close. The
+        snapshot at ``path`` survives the close (checkpoints are ordinary
+        files, not store-held cold spills) and a peer ``import_document``
+        resumes the document bit-exactly (DESIGN.md §11)."""
+        self.checkpoint_document(doc_id, path)
+        self.close_document(doc_id)
+        self.stats.exports += 1
+
+    def import_document(self, doc_id: str, path: str, *,
+                        remove: bool = True) -> None:
+        """Adopt a document from a serving snapshot — the receiving half of
+        migration and failover. A pure re-upload, never a recompute: the
+        slot buffer, free-list order, allocator ids and device state are
+        restored verbatim, so every subsequent dispatch, logits read and
+        suggestion refresh is bitwise-identical to a server that never
+        migrated the document (tests/test_fleet.py). Snapshots flagged
+        ``consistent: False`` (captured mid-round by an eviction) are
+        refused — their mirrors run ahead of their state."""
+        if doc_id in self.docs:
+            raise KeyError(f"document {doc_id!r} already open")
+        state_h, ids, mirrors, meta = restore_serving_document(path)
+        if not meta.get("consistent", True):
+            raise ValueError(
+                f"snapshot for {doc_id!r} is marked inconsistent (captured "
+                "mid-round); re-open the document from its tokens instead")
+        if meta.get("doc_id") not in (None, doc_id):
+            raise ValueError(
+                f"snapshot at {path} belongs to {meta['doc_id']!r}, "
+                f"not {doc_id!r}")
+        pool = meta.get("pos_pool")
+        if pool is not None and int(pool) != self.pos_pool:
+            raise ValueError(
+                f"snapshot position pool {pool} != server pool "
+                f"{self.pos_pool} — position ids would not be comparable")
+        tokens = np.array(mirrors["tokens"], np.int32, copy=True)
+        n_cap = int(tokens.shape[0])
+        eng = self.engine(self.C, self.R)
+        self.store.admit(state_nbytes_for(n_cap, eng.L, eng.meta))
+        alloc = PositionAllocator(1, self.pos_pool)
+        alloc.restore([int(i) for i in np.asarray(ids)])
+        doc = _BatchDoc(
+            doc_id=doc_id, tokens=tokens,
+            valid=np.array(mirrors["valid"], bool, copy=True),
+            positions=np.array(mirrors["positions"], np.int32, copy=True),
+            slots=[int(s) for s in mirrors["slots"]],
+            free=[int(s) for s in mirrors["free"]],
+            n_cap=n_cap, row_capacity=int(meta["row_capacity"]),
+            allocator=alloc, state=state_from_host(state_h),
+            n_virtual=int(meta.get("n_virtual", len(mirrors["slots"]))),
+            suggest_n=int(meta.get("suggest_n", 0)),
+            invalid_from=meta.get("invalid_from"),
+            touched_from=meta.get("touched_from"))
+        self.docs[doc_id] = doc
+        self.store.register(doc)
+        self.stats.docs += 1
+        self.stats.imports += 1
+        if remove:
+            os.remove(path)

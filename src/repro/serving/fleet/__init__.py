@@ -1,0 +1,12 @@
+"""Multi-replica fleet serving (DESIGN.md §11).
+
+A fleet is N replica workers — each a subprocess owning one
+``AsyncBatchServer`` — behind a ``FleetRouter`` that places documents by
+load, keeps routing sticky, migrates documents across replicas through the
+shared cold tier, and fails dead replicas' documents over to survivors.
+"""
+from repro.serving.fleet.router import (
+    FleetRouter, RemoteOpError, ReplicaDiedError,
+)
+
+__all__ = ["FleetRouter", "RemoteOpError", "ReplicaDiedError"]

@@ -13,11 +13,14 @@ concern. Every open document's ``JitState`` lives in exactly one tier:
   eager-copy discipline of ``batch_server._device_copy`` — store-owned
   buffers are never mutated, so the re-upload's asynchronous device read
   cannot race anything).
-* **cold** — an npz on disk (``checkpoint.save_document_state``: the full
-  ``JitState`` plus the allocator's position-id snapshot and the suggestion
-  watermarks, all captured at eviction time so the file is internally
-  consistent), so a fleet can exceed host RAM too — and a process restart
-  can readopt its flushed sessions.
+* **cold** — an npz on disk (``checkpoint.save_serving_document``: the full
+  ``JitState`` plus the allocator's position-id snapshot, the suggestion
+  watermarks, AND the server's host mirrors/slot layout, all captured at
+  eviction time so the file is internally consistent), so a fleet can exceed
+  host RAM too — and a process restart or a fleet peer (DESIGN.md §11) can
+  readopt its flushed sessions. Writes are atomic (temp file + ``os.replace``
+  in the same directory) and file names deterministic per document
+  (``cold_path_for``), which is what lets fleets share one cold directory.
 
 Rehydration is a pure re-upload — **bit-exact, never a recompute**: the
 device state is a pure function of the snapshot, so a document that was
@@ -54,17 +57,31 @@ reconcile exactly against a recount of the underlying objects
 """
 from __future__ import annotations
 
+import hashlib
 import os
+import re
 import tempfile
 from dataclasses import dataclass
-from typing import Optional
+from typing import Callable, Optional
 
 import numpy as np
 
-from repro.checkpoint.store import restore_document_state, save_document_state
+from repro.checkpoint.store import restore_document_state, save_serving_document
 from repro.serving.jit_engine import (
     JitState, state_from_host, state_nbytes, state_to_host,
 )
+
+
+def cold_path_for(cold_dir: str, doc_id: str) -> str:
+    """Deterministic per-document spill path — the cross-process contract of
+    the shared cold tier (DESIGN.md §11): every replica pointed at the same
+    directory computes the same file name for a document, so migration and
+    failover can find each other's spills without a catalog. The sanitized
+    id keeps names debuggable; the hash disambiguates ids that sanitize
+    identically."""
+    safe = re.sub(r"[^A-Za-z0-9._-]", "_", doc_id)[:80]
+    digest = hashlib.sha1(doc_id.encode()).hexdigest()[:8]
+    return os.path.join(cold_dir, f"{safe}-{digest}.state.npz")
 
 TIER_HOT = "hot"
 TIER_WARM = "warm"
@@ -99,6 +116,11 @@ class _Entry:
     # these, not the live doc's (whose host mirrors may already be mid-take),
     # so the npz is internally consistent with its state payload
     warm_meta: Optional[tuple] = None
+    # full host-mirror snapshot (tokens/valid/positions/slots/free + scalar
+    # meta) captured at the same eviction instant — what a spill writes so
+    # ANOTHER process can adopt the file as a complete serving document
+    # (fleet failover, DESIGN.md §11). In-process rehydration ignores it.
+    warm_mirrors: Optional[dict] = None
     cold_path: Optional[str] = None  # npz path (cold tier payload)
     cold_ids: Optional[np.ndarray] = None  # allocator ids recorded at spill
 
@@ -117,21 +139,31 @@ class StateStore:
     def __init__(self, *, docs: dict, stats, drop_suggest, reingest=None,
                  device_budget_bytes: Optional[int] = None,
                  host_budget_bytes: Optional[int] = None,
-                 spill_dir: Optional[str] = None):
+                 spill_dir: Optional[str] = None,
+                 in_round: Optional[Callable[[], bool]] = None):
         if device_budget_bytes is not None and device_budget_bytes <= 0:
             raise ValueError("device_budget_bytes must be positive (or None)")
         if host_budget_bytes is not None and host_budget_bytes <= 0:
             raise ValueError("host_budget_bytes must be positive (or None)")
         self.device_budget_bytes = device_budget_bytes
         self.host_budget_bytes = host_budget_bytes
+        # spill_dir doubles as the SHARED cold tier when a fleet points every
+        # replica's store at one directory (DESIGN.md §11): per-document file
+        # names are deterministic (cold_path_for) and writes are atomic, so
+        # peers can adopt spills; ownership is arbitrated by the fleet's
+        # lease protocol, not by this class.
         self._spill_dir = spill_dir
         self._docs = docs
         self._stats = stats
         self._drop_suggest = drop_suggest
         self._reingest = reingest  # rebuild-from-mirrors (TIER_VOID recovery)
+        # truthy while the server is inside a scheduling round: host mirrors
+        # of a mid-take document run AHEAD of its device state, so snapshots
+        # captured then are marked consistent=False (usable for in-process
+        # rehydration, not for cross-process adoption)
+        self._in_round = in_round
         self._entries: dict[str, _Entry] = {}
         self._clock = 0
-        self._uid = 0
 
     # ------------------------------------------------------------- queries
 
@@ -160,12 +192,11 @@ class StateStore:
     def _budget_used(self) -> int:
         return self._stats.bytes_hot + self._stats.bytes_suggest
 
-    def _spill_path(self) -> str:
+    def _spill_path(self, doc_id: str) -> str:
         if self._spill_dir is None:
             self._spill_dir = tempfile.mkdtemp(prefix="repro-state-store-")
         os.makedirs(self._spill_dir, exist_ok=True)
-        self._uid += 1
-        return os.path.join(self._spill_dir, f"doc{self._uid}.npz")
+        return cold_path_for(self._spill_dir, doc_id)
 
     def _drop_holdings(self, e: _Entry) -> None:
         """Forget whatever tier payload the entry holds (accounting too).
@@ -178,6 +209,7 @@ class StateStore:
             self._stats.docs_warm -= 1
             e.warm = None
             e.warm_meta = None
+            e.warm_mirrors = None
         elif e.tier == TIER_COLD:
             self._stats.bytes_cold -= e.nbytes
             self._stats.docs_cold -= 1
@@ -357,6 +389,29 @@ class StateStore:
         e.warm = state_to_host(doc.state)
         e.warm_meta = (doc.allocator.snapshot(), doc.invalid_from,
                        doc.touched_from)
+        # full serving snapshot for cross-process adoption (only spills read
+        # it). Mirrors are copied NOW, same instant as the state snapshot;
+        # consistent=False when captured mid-round (a peeled take means the
+        # mirrors run ahead of the state — fine for in-process rehydration,
+        # poison for adoption).
+        e.warm_mirrors = {
+            "mirrors": {
+                "tokens": doc.tokens.copy(),
+                "valid": doc.valid.copy(),
+                "positions": doc.positions.copy(),
+                "slots": np.asarray(doc.slots, np.int32),
+                "free": np.asarray(doc.free, np.int32),
+            },
+            "meta": {
+                "doc_id": doc.doc_id,
+                "row_capacity": int(doc.row_capacity),
+                "n_virtual": int(doc.n_virtual),
+                "suggest_n": int(doc.suggest_n),
+                "pos_pool": int(doc.allocator.pool_size),
+                "consistent": not (self._in_round is not None
+                                   and self._in_round()),
+            },
+        }
         doc.state = None
         e.tier = TIER_WARM
         self._stats.bytes_hot -= e.nbytes
@@ -381,23 +436,26 @@ class StateStore:
             self._spill_warm(e)
 
     def _spill_warm(self, e: _Entry) -> None:
-        path = self._spill_path()
+        path = self._spill_path(e.doc_id)
         # companions captured at eviction time, NOT read from the live doc:
         # between eviction and spill a take may have mutated the host-side
-        # allocator/watermarks past the snapshotted state. (Durable
-        # cross-process readoption additionally wants a flushed document —
-        # eviction of a doc with a pending take records post-take mirrors
-        # against its pre-take state; in-process rehydration never reads
-        # the file's companions, only integrity-checks them.)
+        # allocator/watermarks past the snapshotted state. The spill is a
+        # FULL serving snapshot (mirrors + meta, also eviction-time) so a
+        # fleet peer can adopt it on failover; its meta carries the
+        # consistency flag recorded at eviction. Write is atomic
+        # (checkpoint.atomic_savez): a crash mid-spill never leaves a
+        # truncated file at the visible path.
         ids, invalid_from, touched_from = e.warm_meta
-        save_document_state(path, e.warm, allocator_ids=ids,
-                            invalid_from=invalid_from,
-                            touched_from=touched_from,
-                            extra={"doc_id": e.doc_id})
+        meta = dict(e.warm_mirrors["meta"])
+        meta["invalid_from"] = invalid_from
+        meta["touched_from"] = touched_from
+        save_serving_document(path, e.warm, allocator_ids=ids,
+                              mirrors=e.warm_mirrors["mirrors"], meta=meta)
         e.cold_path = path
         e.cold_ids = np.asarray(ids, np.int32).copy()
         e.warm = None
         e.warm_meta = None
+        e.warm_mirrors = None
         e.tier = TIER_COLD
         self._stats.bytes_warm -= e.nbytes
         self._stats.docs_warm -= 1

@@ -1,0 +1,305 @@
+"""Fleet serving (ISSUE 10): router, replica workers, shared cold tier.
+
+The exactness ladder for ``serving.fleet``:
+
+1. cross-replica **migration** is invisible — a migrated document's logits
+   are bitwise-equal and its suggestions token-exact vs a never-migrated
+   in-process oracle, through forced slot-buffer grows and defrags both
+   before and after the move;
+2. **failover** — documents of a hard-killed replica resume token-exact on
+   the survivors: acked edits are already in the recovery target, and the
+   client replays exactly the tickets that failed (a per-document suffix),
+   never double-applying;
+3. the router's **aggregated stats reconcile** with the sum of replica
+   stats and with the client-side acked-work count;
+4. ``close_fleet`` is **leak-free** — no surviving subprocess, no cold
+   files, no leases (looped, with a residual checkpoint snapshot to clean);
+5. fast unit layers: lease mutual exclusion, RPC framing, and the
+   crash-safe cold-tier write (an interrupted spill never leaves a
+   truncated archive visible — satellite of ISSUE 10).
+
+Process tests are ``slow`` (each fleet pays subprocess jax boots); CI's
+bench-gate covers the same contract via ``benchmarks.fleet_load``.
+"""
+import io
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import atomic_savez
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.serving.batch_server import BatchServer
+from repro.serving.fleet import FleetRouter, RemoteOpError, ReplicaDiedError
+from repro.serving.fleet import cold_tier
+from repro.serving.fleet.protocol import ProtocolError, recv_msg, send_msg
+
+WAIT = 600.0
+N_NEW = 4
+# tiny capacity + position pool: insert streams force grows AND defrags
+SERVER_KW = {"edit_capacity": 4, "row_capacity": 16, "max_batch": 4,
+             "min_doc_capacity": 8, "pos_pool": 64}
+
+
+# ------------------------------------------------------------- fast: leases
+
+
+def test_lease_protocol(tmp_path):
+    cold = str(tmp_path)
+    cold_tier.acquire_lease(cold, "doc", "r0")
+    assert cold_tier.lease_owner(cold, "doc") == "r0"
+    cold_tier.acquire_lease(cold, "doc", "r0")  # idempotent re-acquire
+    with pytest.raises(cold_tier.LeaseHeldError):
+        cold_tier.acquire_lease(cold, "doc", "r1")
+    with pytest.raises(cold_tier.LeaseHeldError):
+        cold_tier.release_lease(cold, "doc", "r1")
+    cold_tier.release_lease(cold, "doc", "r0")
+    assert cold_tier.lease_owner(cold, "doc") is None
+    cold_tier.release_lease(cold, "doc", "r0")  # missing lease: no-op
+    cold_tier.acquire_lease(cold, "doc", "r1")
+    cold_tier.break_lease(cold, "doc")  # router's failover prerogative
+    assert cold_tier.lease_owner(cold, "doc") is None
+
+
+def test_cold_path_names(tmp_path):
+    a = cold_tier.cold_path_for(str(tmp_path), "weird/../doc id!")
+    b = cold_tier.cold_path_for(str(tmp_path), "weird/../doc id?")
+    assert a != b  # sanitized names stay distinct via the digest suffix
+    assert os.path.dirname(a) == str(tmp_path)
+    assert "/.." not in os.path.basename(a) and " " not in os.path.basename(a)
+    assert a == cold_tier.cold_path_for(str(tmp_path), "weird/../doc id!")
+
+
+# -------------------------------------------------------- fast: RPC framing
+
+
+def test_protocol_framing_roundtrip():
+    buf = io.BytesIO()
+    msgs = [{"id": 1, "ops": [{"op": "ping"}]},
+            {"arr": np.arange(5), "s": "x"}]
+    for m in msgs:
+        send_msg(buf, m)
+    buf.seek(0)
+    got = [recv_msg(buf), recv_msg(buf)]
+    assert got[0] == msgs[0]
+    np.testing.assert_array_equal(got[1]["arr"], msgs[1]["arr"])
+    with pytest.raises(EOFError):
+        recv_msg(buf)  # clean EOF at a frame boundary
+    half = io.BytesIO(b"\x00\x00")
+    with pytest.raises(EOFError):
+        recv_msg(half)  # pipe died mid-header
+    bogus = io.BytesIO(b"\xff\xff\xff\xff")
+    with pytest.raises(ProtocolError):
+        recv_msg(bogus)  # absurd length = corrupted framing
+
+
+# ---------------------------------------- fast: crash-safe cold-tier writes
+
+
+def test_interrupted_spill_never_visible(tmp_path, monkeypatch):
+    """A spill that dies mid-write (the satellite regression): the
+    destination keeps the previous complete archive and no temp garbage
+    survives — a reader can never observe a truncated npz."""
+    path = str(tmp_path / "doc.state.npz")
+    atomic_savez(path, {"a": np.arange(4)})
+    np.testing.assert_array_equal(np.load(path)["a"], np.arange(4))
+
+    real_savez = np.savez
+
+    def dying_savez(fp, **arrays):
+        fp.write(b"PK\x03\x04 truncated")  # partial zip magic, then crash
+        raise RuntimeError("simulated crash mid-spill")
+
+    monkeypatch.setattr(np, "savez", dying_savez)
+    with pytest.raises(RuntimeError, match="simulated crash"):
+        atomic_savez(path, {"a": np.arange(9)})
+    monkeypatch.setattr(np, "savez", real_savez)
+
+    # old snapshot intact, no *.tmp* orphans left behind
+    np.testing.assert_array_equal(np.load(path)["a"], np.arange(4))
+    assert [f for f in os.listdir(tmp_path) if ".tmp" in f] == []
+
+
+# -------------------------------------------------------- process fixtures
+
+
+@pytest.fixture(scope="module")
+def oracle():
+    cfg = get_config("vq-opt-125m", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)  # == worker seed 0
+    return cfg, BatchServer(params, cfg, **SERVER_KW)
+
+
+@pytest.fixture(scope="module")
+def fleet2(tmp_path_factory):
+    cold = str(tmp_path_factory.mktemp("fleet-cold"))
+    fleet = FleetRouter(2, cold_dir=cold, server_kwargs=SERVER_KW,
+                        max_batch_delay_ms=3.0, seed=0)
+    yield fleet
+    fleet.close_fleet()
+
+
+# ------------------------------------------------------------ slow: migration
+
+
+@pytest.mark.slow
+def test_migration_bitwise_exact(fleet2, oracle):
+    """Forced grow/defrag, migrate, forced grow/defrag again: logits stay
+    bitwise-equal and suggestions token-exact vs the never-migrated oracle
+    (the DESIGN.md §11 acceptance criterion, in-process edition)."""
+    cfg, srv = oracle
+    rng = np.random.default_rng(3)
+    ref = [int(t) for t in rng.integers(0, cfg.vocab, 7)]
+    fleet2.open_document("mig", ref).result(WAIT)
+    srv.open_document("mig", ref)
+    src = fleet2.owner_of("mig")
+
+    def insert_burst(n):
+        for _ in range(n):
+            tok = int(rng.integers(cfg.vocab))
+            fleet2.submit_insert("mig", 3, tok).result(WAIT)
+            srv.submit_insert("mig", 3, tok)
+            ref.insert(3, tok)
+        srv.flush()  # the oracle's logits/tokens refuse unflushed queues
+
+    insert_burst(10)  # blows past min capacity 8 and chews the 64-id pool
+    np.testing.assert_array_equal(fleet2.suggest("mig", N_NEW).result(WAIT),
+                                  srv.suggest("mig", N_NEW))
+
+    fleet2.migrate("mig", (src + 1) % 2)
+    assert fleet2.owner_of("mig") == (src + 1) % 2
+    np.testing.assert_array_equal(fleet2.logits("mig").result(WAIT),
+                                  np.asarray(srv.logits("mig")))
+
+    insert_burst(8)  # re-ingest paths again, now on the adopting replica
+    np.testing.assert_array_equal(fleet2.logits("mig").result(WAIT),
+                                  np.asarray(srv.logits("mig")))
+    np.testing.assert_array_equal(fleet2.suggest("mig", N_NEW).result(WAIT),
+                                  srv.suggest("mig", N_NEW))
+    assert list(fleet2.tokens("mig").result(WAIT)) == ref
+
+    agg = fleet2.stats(WAIT)
+    assert agg["exports"] >= 1 and agg["imports"] >= 1
+    assert agg["router"]["migrations"] >= 1
+    per = agg["per_replica"]
+    assert sum(s["batch"]["grows"] for s in per) >= 1
+    assert sum(s["batch"]["defrags"] for s in per) >= 1
+
+
+@pytest.mark.slow
+def test_stats_reconcile(fleet2, oracle):
+    """Fleet aggregation == sum of replica stats == client-side acked work."""
+    cfg, _ = oracle
+    before = fleet2.stats(WAIT)
+    rng = np.random.default_rng(5)
+    docs = ["s0", "s1"]
+    for d in docs:
+        fleet2.open_document(
+            d, [int(t) for t in rng.integers(0, cfg.vocab, 10)]).result(WAIT)
+    assert fleet2.owner_of("s0") != fleet2.owner_of("s1")  # load spreads
+    n_edits = 6
+    tickets = [fleet2.submit_replace(d, i % 10, int(rng.integers(cfg.vocab)))
+               for i in range(n_edits // 2) for d in docs]
+    acked = sum(1 for t in tickets if t.result(WAIT) is not None or True)
+    agg = fleet2.stats(WAIT)
+    per = agg["per_replica"]
+    for field in ("edits_applied", "hot_hits", "state_touches", "exports",
+                  "imports"):
+        assert agg[field] == sum(s["batch"][field] for s in per)
+    assert agg["rounds"] == sum(s["async"]["rounds"] for s in per)
+    assert agg["edits_applied"] - before["edits_applied"] == acked == n_edits
+    assert agg["docs_open"] == len(fleet2._route)
+    assert (agg["router"]["docs_opened"] - agg["router"]["docs_closed"]
+            == agg["docs_open"])
+    assert 0.0 <= agg["hot_hit_rate"] <= 1.0
+    merged = agg["edit_latency"]
+    assert merged["count"] == sum(
+        s["batch"]["edit_latency"]["count"] for s in per)
+    for d in docs:
+        fleet2.close_document(d).result(WAIT)
+
+
+# ------------------------------------------------------------ slow: failover
+
+
+@pytest.mark.slow
+def test_failover_resume_token_exact(tmp_path):
+    """Kill a replica with acked, checkpointed AND in-flight edits: its
+    documents fail over to the survivor, the client replays exactly the
+    failed tickets, and every document's tokens stay exact."""
+    cfg = get_config("vq-opt-125m", smoke=True)
+    rng = np.random.default_rng(7)
+    fleet = FleetRouter(2, cold_dir=str(tmp_path / "cold"),
+                        server_kwargs=SERVER_KW, max_batch_delay_ms=3.0)
+    try:
+        refs = {d: [int(t) for t in rng.integers(0, cfg.vocab, 10)]
+                for d in ("f0", "f1")}
+        for d, ref in refs.items():
+            fleet.open_document(d, ref).result(WAIT)
+        victim = fleet.owner_of("f0")
+        survivor = 1 - victim
+        assert fleet.owner_of("f1") == survivor
+
+        for i in range(3):  # acked work, then a fleet-wide snapshot
+            for d in refs:
+                tok = int(rng.integers(cfg.vocab))
+                fleet.submit_replace(d, i, tok).result(WAIT)
+                refs[d][i] = tok
+        fleet.checkpoint(WAIT)
+
+        # in-flight edits racing the kill: each either acks (already in the
+        # recovery target) or fails (client replays it) — never both
+        inflight = []
+        for i in range(3):
+            tok = int(rng.integers(cfg.vocab))
+            inflight.append(((i, tok), fleet.submit_replace("f0", i, tok)))
+        fleet.kill_replica(victim)
+        assert fleet.stats_fleet.failovers == 1
+        assert fleet.owner_of("f0") == survivor
+        for (pos, tok), t in inflight:
+            try:
+                t.result(WAIT)
+            except (ReplicaDiedError, RemoteOpError):
+                fleet.submit_replace("f0", pos, tok).result(WAIT)
+            refs["f0"][pos] = tok
+
+        for d in refs:  # both documents keep serving on the survivor
+            tok = int(rng.integers(cfg.vocab))
+            fleet.submit_insert(d, 2, tok).result(WAIT)
+            refs[d].insert(2, tok)
+            assert list(fleet.tokens(d).result(WAIT)) == refs[d]
+        assert len(fleet.suggest("f0", N_NEW).result(WAIT)) == N_NEW
+        # the dead replica's lease was broken, the survivor's acquired
+        assert cold_tier.lease_owner(fleet.cold_dir, "f0") == f"r{survivor}"
+    finally:
+        fleet.close_fleet()
+    assert all(r.proc.poll() is not None for r in fleet.replicas)
+
+
+# ----------------------------------------------------------- slow: leak loop
+
+
+@pytest.mark.slow
+def test_close_fleet_leak_loop(tmp_path):
+    """Repeated fleet lifecycles leave nothing behind: no subprocess, no
+    cold-tier document files, no leases — even when a checkpoint parked a
+    residual snapshot in the shared directory before the close."""
+    cfg = get_config("vq-opt-125m", smoke=True)
+    cold = str(tmp_path / "cold")
+    for it in range(2):
+        fleet = FleetRouter(1, cold_dir=cold, server_kwargs=SERVER_KW,
+                            max_batch_delay_ms=3.0)
+        try:
+            fleet.open_document("d", list(range(8))).result(WAIT)
+            fleet.submit_insert("d", 0, 5).result(WAIT)
+            assert len(fleet.suggest("d", N_NEW).result(WAIT)) == N_NEW
+            if it == 1:
+                fleet.checkpoint(WAIT)  # close must clean this snapshot up
+                assert os.listdir(cold)
+        finally:
+            fleet.close_fleet()
+        assert all(r.proc.poll() is not None for r in fleet.replicas)
+        assert os.listdir(cold) == [], f"cold leftovers on iteration {it}"
+    assert cfg.vocab > 0
